@@ -1,0 +1,26 @@
+"""Timing helpers for the benchmark harness (CPU wall-clock; jit-warmed,
+second execution onward — the paper's own convention: 'we run each program
+two times and report the results of the second execution')."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed_s(fn, *args, reps: int = 5, warmup: int = 1) -> float:
+    """Median of `reps` timed calls (median resists CPU scheduler noise on
+    the microsecond-scale paper benches)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

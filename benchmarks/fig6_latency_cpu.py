@@ -1,0 +1,48 @@
+"""Paper Fig. 6 — speed-up sensitivity to the input-function latency (CPU).
+
+Paper setup: 3 threads (k=2), eps=2^-6 (6 serial iterations -> 3 rounds),
+Taylor terms swept.  Paper result: 86% SLOWDOWN at 10 terms (thread
+create/join dominates), break-even near 500, +97% at 10^4 terms.
+
+TPU adaptation: lane-level speculation has no create/join cost, so the
+low-latency cliff should VANISH (DESIGN.md §8.1) — measured here.  The
+cliff reappears when each round pays a cross-chip collective: that is the
+chip-level variant in fig6_chip_level.py (8-device subprocess).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed_s
+from repro.core import find_root_runahead, find_root_serial, make_paper_f
+
+N_ITER = 6
+K = 2  # 3 "threads" incl. main, as in the paper
+
+
+def run() -> list[str]:
+    out = []
+    paper = {10: -0.86, 500: 0.0, 10_000: 0.97}
+    for terms in (10, 100, 500, 1_000, 5_000, 10_000):
+        f = make_paper_f(terms)
+        a, b = jnp.float32(1.0), jnp.float32(2.0)
+        ts = timed_s(
+            lambda aa, bb: find_root_serial(f, aa, bb, N_ITER, "signbit"),
+            a, b, reps=20,
+        )
+        tr = timed_s(
+            lambda aa, bb: find_root_runahead(f, aa, bb, N_ITER, K),
+            a, b, reps=20,
+        )
+        speedup = ts / tr - 1.0
+        ref = paper.get(terms)
+        ref_s = f"paper={ref:+.2f}" if ref is not None else ""
+        out.append(
+            row(f"fig6/terms_{terms}", tr * 1e6,
+                f"speedup={speedup:+.2f};serial_us={ts * 1e6:.1f};{ref_s}")
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

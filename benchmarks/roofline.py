@@ -1,0 +1,135 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x shape x mesh) cell from the dry-run JSON.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (3 links/chip on a 2D torus; we charge the per-link
+figure, conservative).
+
+IMPORTANT measurement conventions (EXPERIMENTS.md §Dry-run):
+  * cost_analysis() is reported for the WHOLE partitioned module but FLOPs
+    for SPMD modules are per-device (XLA reports the per-partition
+    program); we normalise by dividing by 1 (per-device numbers) and
+    multiply MODEL_FLOPS by nothing — the ratio column makes the
+    convention visible per cell.
+  * collective_bytes sums each collective's output payload once per op.
+  * the CPU backend legalises bf16 via f32, inflating bytes_accessed and
+    temp memory up to ~2x vs a real TPU lowering; flagged per cell.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_JSON = os.path.join(HERE, "dryrun_results.json")
+
+
+def model_flops(arch: str, shape: dict) -> float:
+    """6 * N(active) * tokens — the 'useful' training FLOPs (3x fwd-only
+    for decode/prefill steps we use 2 * N * tokens per token forward)."""
+    from repro.configs.registry import SHAPES, get_config
+
+    cfg = get_config(arch)
+    n_active = cfg.param_count(active_only=True)
+    spec = SHAPES[shape] if isinstance(shape, str) else shape
+    if spec.kind == "train":
+        tokens = spec.seq_len * spec.global_batch
+        return 6.0 * n_active * tokens
+    if spec.kind == "prefill":
+        tokens = spec.seq_len * spec.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * spec.global_batch
+
+
+def analyse(results: list[dict]) -> list[dict]:
+    out = []
+    for r in results:
+        if not r.get("ok"):
+            out.append(dict(r))
+            continue
+        n = r["n_devices"]
+        flops = r["cost"]["flops"]              # per-device partition
+        byts = r["cost"]["bytes_accessed"]
+        coll = r["collective_bytes"]
+        t_c = flops / PEAK_FLOPS
+        t_m = byts / HBM_BW
+        t_x = coll / LINK_BW
+        dominant = max(("compute", t_c), ("memory", t_m),
+                       ("collective", t_x), key=lambda kv: kv[1])[0]
+        mf = model_flops(r["arch"], r["shape"])
+        mf_dev = mf / n
+        useful = mf_dev / flops if flops else 0.0
+        bound = max(t_c, t_m, t_x)
+        # roofline fraction: useful model FLOPs per device / (peak * bound
+        # time) — "how close the step comes to the best this mix allows"
+        frac = mf_dev / (PEAK_FLOPS * bound) if bound else 0.0
+        out.append({
+            **{k: r[k] for k in ("arch", "shape", "mesh", "n_devices")},
+            "t_compute_s": t_c,
+            "t_memory_s": t_m,
+            "t_collective_s": t_x,
+            "dominant": dominant,
+            "model_flops_per_dev": mf_dev,
+            "useful_flops_ratio": useful,
+            "roofline_fraction": frac,
+            "temp_gib": r["memory"]["temp_size_in_bytes"] / 2**30,
+            "collectives": r.get("collectives", {}),
+        })
+    return out
+
+
+def render_table(rows: list[dict], mesh: str | None = "16x16") -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'t_comp':>9s} "
+           f"{'t_mem':>9s} {'t_coll':>9s} {'dom':>10s} {'useful':>7s} "
+           f"{'roofline':>9s} {'temp':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if "t_compute_s" not in r:
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} FAILED")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['t_compute_s']*1e3:8.2f}m {r['t_memory_s']*1e3:8.2f}m "
+            f"{r['t_collective_s']*1e3:8.2f}m {r['dominant']:>10s} "
+            f"{r['useful_flops_ratio']:7.2f} {r['roofline_fraction']:9.3f} "
+            f"{r['temp_gib']:7.1f}G"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=DEFAULT_JSON)
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 | 2x16x16")
+    ap.add_argument("--out", default=None, help="write analysed JSON")
+    args = ap.parse_args(argv)
+    with open(args.json) as f:
+        data = json.load(f)
+    rows = analyse(data["results"])
+    print(render_table(rows, args.mesh))
+    if data.get("skips"):
+        print("\ndocumented skips (DESIGN.md §7):")
+        for s in data["skips"]:
+            print(f"  {s['arch']:22s} {s['shape']:12s} {s['skipped'][:60]}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"\nwrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one module per paper table/figure plus
+the beyond-paper LM-integration benches.  Prints ``name,us_per_call,derived``
+CSV (deliverable d).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4,fig6]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+ALL = [
+    "fig4_thread_sweep",
+    "fig5_wide_sweep",
+    "fig6_latency_cpu",
+    "fig6_chip_level",
+    "fig7_latency_gpu",
+    "sampler_bench",
+    "moe_capacity_bench",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args(argv)
+    chosen = ALL
+    if args.only:
+        prefixes = args.only.split(",")
+        chosen = [m for m in ALL if any(m.startswith(p) for p in prefixes)]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in chosen:
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod_name}/FAILED,0.0,{type(e).__name__}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

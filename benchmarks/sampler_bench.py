@@ -1,0 +1,57 @@
+"""Beyond-paper benchmark: LM sampling threshold solves on real vocab sizes.
+
+Compares, per vocab size (batch 8):
+  * sort-based exact top-k reference (jnp.sort),
+  * jax.lax.top_k,
+  * runahead bisection (unfused multi-pass),
+  * fused Pallas runahead kernel (interpret mode on CPU — the TPU target
+    keeps the row VMEM-resident across all rounds; DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed_s
+from repro.core.applications import topk_threshold
+from repro.kernels import ops
+
+K = 50
+
+
+def run() -> list[str]:
+    out = []
+    rng = np.random.default_rng(0)
+    for vocab in (8_192, 32_768, 151_936):
+        logits = jnp.asarray(rng.normal(size=(8, vocab)).astype(np.float32))
+
+        t_sort = timed_s(
+            jax.jit(lambda z: jnp.sort(z, axis=-1)[:, -K]), logits, reps=3
+        )
+        t_topk = timed_s(
+            jax.jit(lambda z: jax.lax.top_k(z, K)[0][:, -1]), logits, reps=3
+        )
+        solve = jax.jit(jax.vmap(
+            lambda row_: topk_threshold(row_, K, spec_k=5, rounds=6)[1]
+        ))
+        t_bis = timed_s(solve, logits, reps=3)
+        out.append(row(f"sampler/sort_v{vocab}", t_sort * 1e6, ""))
+        out.append(row(f"sampler/lax_topk_v{vocab}", t_topk * 1e6, ""))
+        out.append(row(
+            f"sampler/runahead_v{vocab}", t_bis * 1e6,
+            f"vs_sort={t_sort / t_bis:.2f}x;vs_topk={t_topk / t_bis:.2f}x",
+        ))
+    # fused kernel (interpret mode — correctness/latency shape only on CPU)
+    logits = jnp.asarray(rng.normal(size=(2, 32_768)).astype(np.float32))
+    t_fused = timed_s(
+        lambda z: ops.runahead_topk_threshold(z, k_target=K, rounds=6)[1],
+        logits, reps=2,
+    )
+    out.append(row("sampler/fused_pallas_interp_v32768", t_fused * 1e6,
+                   "interpret_mode;TPU_target_is_VMEM_resident"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

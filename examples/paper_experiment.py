@@ -1,0 +1,66 @@
+"""Faithful reproduction of the paper's Table-1 experiment at laptop scale.
+
+f(x) = sin(cos(x)) by Taylor series, interval (1, 2), fixed iteration
+budget; sweep the 'thread count' (speculative width 2**k - 1) and the
+function latency (Taylor terms), reporting wall-clock speed-ups — the
+Fig. 4 and Fig. 6 axes.  The full benchmark grid lives in benchmarks/.
+
+Run:  PYTHONPATH=src python examples/paper_experiment.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    find_root_runahead,
+    find_root_serial,
+    iterations_for_error,
+    make_paper_f,
+)
+
+A, B = 1.0, 2.0
+
+
+def timed(fn, *args, reps=5):
+    fn(*args).block_until_ready()          # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def main():
+    n = 24                                  # serial iteration budget
+    terms = 2000                            # expensive f (paper: 10^4)
+    f = make_paper_f(terms)
+    a = jnp.float32(A)
+    b = jnp.float32(B)
+
+    t_serial = timed(
+        lambda aa, bb: find_root_serial(f, aa, bb, n, "signbit"), a, b
+    )
+    print(f"iterations={n}, taylor_terms={terms}")
+    print(f"{'threads':>8} {'rounds':>7} {'time_ms':>9} {'speedup':>8}  "
+          f"(paper Fig.4: 3thr->1.8x, 7thr->2.6x)")
+    print(f"{'serial':>8} {n:7d} {t_serial*1e3:9.2f} {1.0:8.2f}x")
+    for k in (1, 2, 3, 4, 5):
+        t = timed(
+            lambda aa, bb: find_root_runahead(f, aa, bb, n, k), a, b
+        )
+        print(f"{2**k - 1:8d} {-(-n // k):7d} {t*1e3:9.2f} "
+              f"{t_serial / t:8.2f}x")
+
+    print("\nfunction-latency sensitivity (paper Fig. 6), k=1 (3 'threads'):")
+    for terms in (10, 100, 500, 2000):
+        f = make_paper_f(terms)
+        ts = timed(lambda aa, bb: find_root_serial(f, aa, bb, 6, "signbit"),
+                   a, b)
+        tr = timed(lambda aa, bb: find_root_runahead(f, aa, bb, 6, 1), a, b)
+        print(f"  terms={terms:5d}  serial {ts*1e3:7.2f}ms  "
+              f"runahead {tr*1e3:7.2f}ms  speedup {ts/tr:5.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Serving scenario (deliverable b): batched generation from a reduced
+qwen2-moe with the paper's technique active at BOTH integration points —
+bisection expert-capacity routing in the model and the runahead
+top-k/top-p/entropy sampler on the logits.
+
+Run:  PYTHONPATH=src python examples/serve_moe.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.testing import reduced_config
+from repro.models.transformer import init_params
+from repro.serving.engine import generate
+from repro.serving.sampler import SamplerConfig
+
+
+def main():
+    cfg = reduced_config("qwen2-moe-a2.7b")
+    key = jax.random.PRNGKey(7)
+    params = init_params(cfg, key, jnp.bfloat16)
+    B, S, N = 4, 24, 48
+    prompt = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    runs = {
+        "greedy-ish (top-k=1)": SamplerConfig(top_k=1),
+        "top-k=20 runahead": SamplerConfig(top_k=20),
+        "nucleus p=0.9": SamplerConfig(top_p=0.9),
+        "entropy-calibrated H=2.0": SamplerConfig(target_entropy=2.0),
+    }
+    for name, sc in runs.items():
+        t0 = time.time()
+        toks = generate(cfg, params, prompt, N, key, sampler=sc)
+        toks.block_until_ready()
+        uniq = len(set(toks[0].tolist()))
+        print(f"{name:28s} {B*N} tokens in {time.time()-t0:5.1f}s "
+              f"(row-0 distinct tokens: {uniq}/{N})")
+    print("\nMoE capacity enforced by runahead bisection "
+          "(models/moe.py capacity_mode='bisect' is property-tested against "
+          "fifo in tests/test_moe.py)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Core — the paper's contribution: runahead (speculative) bisection.
+
+Public API:
+  find_root_serial            Algorithm 1 baseline (paper §III.B)
+  find_root_runahead          lane-level runahead bisection (paper §IV)
+  find_root_runahead_sharded  chip-level (mesh axis) runahead bisection
+  runahead_solve              generic interval solve with fused multi_eval
+  applications                LM-stack monotone solves built on the above
+"""
+from repro.core.bisect import (
+    find_root_serial,
+    find_root_serial_batched,
+    iterations_for_error,
+)
+from repro.core.runahead import (
+    find_root_runahead,
+    find_root_runahead_batched,
+    runahead_solve,
+    serial_equivalent_iterations,
+)
+from repro.core.sharded import find_root_runahead_sharded
+from repro.core.paper_functions import (
+    make_paper_f,
+    taylor_sin,
+    taylor_cos,
+    PAPER_INTERVAL,
+    PAPER_TERMS,
+    PAPER_EPS_CPU,
+)
+from repro.core import applications
+
+__all__ = [
+    "find_root_serial",
+    "find_root_serial_batched",
+    "iterations_for_error",
+    "find_root_runahead",
+    "find_root_runahead_batched",
+    "runahead_solve",
+    "serial_equivalent_iterations",
+    "find_root_runahead_sharded",
+    "make_paper_f",
+    "taylor_sin",
+    "taylor_cos",
+    "PAPER_INTERVAL",
+    "PAPER_TERMS",
+    "PAPER_EPS_CPU",
+    "applications",
+]

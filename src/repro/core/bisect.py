@@ -1,0 +1,92 @@
+"""Serial bisection root-finding — the paper's baseline (Algorithm 1).
+
+Faithful to the paper:
+  * fixed iteration count, NO early exit even when the exact root is hit;
+  * each iteration evaluates f once at the midpoint;
+  * the returned ``root`` is the *last midpoint examined* (Algorithm 1
+    returns the loop variable ``root``, not the interval centre).
+
+Two sign conventions are provided because the paper itself uses two:
+
+  * ``mode="product"``  — Algorithm 1 literal: ``f(a) * f(root) < 0``.
+    An exact zero at the midpoint takes the ``else`` branch (a <- root).
+  * ``mode="signbit"``  — the Runahead array semantics (paper §IV.A): a
+    thread writes '1' iff its value is negative, intervals are selected by
+    XOR of neighbouring sign bits.  An exact zero counts as positive, so
+    ``f(root) == 0`` sends the root to the *left* half (b <- root).
+
+The two modes only differ when a midpoint lands exactly on a root.  The
+runahead implementation (``repro.core.runahead``) is trajectory-equivalent
+to ``mode="signbit"`` — bit-exact, which the property tests pin down.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _sign_bit(v: jax.Array) -> jax.Array:
+    """Paper §IV.A: '1' if negative else '0'.  Exact zero counts positive."""
+    return v < 0
+
+
+@partial(jax.jit, static_argnums=(0, 3, 4))
+def find_root_serial(
+    f: Callable[[jax.Array], jax.Array],
+    a: jax.Array,
+    b: jax.Array,
+    iterations: int,
+    mode: str = "product",
+) -> jax.Array:
+    """Algorithm 1 of the paper.  Returns the last midpoint examined."""
+    if mode not in ("product", "signbit"):
+        raise ValueError(f"unknown mode {mode!r}")
+    a = jnp.asarray(a)
+    b = jnp.asarray(b, dtype=a.dtype)
+    fa = f(a)
+
+    def body(_, carry):
+        a, b, fa, _ = carry
+        root = (a + b) / 2
+        froot = f(root)
+        if mode == "product":
+            go_left = fa * froot < 0
+        else:
+            go_left = _sign_bit(fa) != _sign_bit(froot)
+        # go_left: the root is bracketed by (a, root)  ->  b <- root
+        new_a = jnp.where(go_left, a, root)
+        new_b = jnp.where(go_left, root, b)
+        new_fa = jnp.where(go_left, fa, froot)
+        return new_a, new_b, new_fa, root
+
+    _, _, _, root = jax.lax.fori_loop(
+        0, iterations, body, (a, b, fa, (a + b) / 2)
+    )
+    return root
+
+
+@partial(jax.jit, static_argnums=(0, 3, 4))
+def find_root_serial_batched(
+    f: Callable[[jax.Array], jax.Array],
+    a: jax.Array,
+    b: jax.Array,
+    iterations: int,
+    mode: str = "product",
+) -> jax.Array:
+    """vmap of Algorithm 1 over a batch of independent problems.
+
+    ``f`` must be elementwise (applied to a vector of query points, one per
+    problem instance).
+    """
+    solve = lambda ai, bi: find_root_serial(f, ai, bi, iterations, mode)
+    return jax.vmap(solve)(jnp.asarray(a), jnp.asarray(b))
+
+
+def iterations_for_error(a: float, b: float, eps: float) -> int:
+    """Paper §III.A: ceil(log2((b - a) / eps)) iterations reach error < eps."""
+    import math
+
+    return int(math.ceil(math.log2((b - a) / eps)))

@@ -1,0 +1,70 @@
+"""The paper's evaluation function: Taylor-series trig (Table 1).
+
+The paper computes f(x) = sin(cos(x)) where sin and cos are evaluated by
+their Taylor series with a configurable term count — the term count is the
+*latency knob* for the Fig. 6/7 sensitivity study.  We keep the series
+evaluation as an explicit ``lax.fori_loop`` accumulation so the term count
+genuinely scales work (XLA cannot constant-fold it away for traced inputs).
+
+Terms are accumulated with the recurrence
+  sin: t_{i+1} = -t_i * x^2 / ((2i+2)(2i+3)),   t_0 = x
+  cos: t_{i+1} = -t_i * x^2 / ((2i+1)(2i+2)),   t_0 = 1
+which is numerically stable for |x| <= pi and costs O(terms) multiply-adds
+per point — the same cost model as the paper's implementation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnums=(1,))
+def taylor_sin(x: jax.Array, terms: int) -> jax.Array:
+    x = jnp.asarray(x)
+    x2 = x * x
+
+    def body(i, carry):
+        acc, t = carry
+        i = i.astype(x.dtype)
+        t = -t * x2 / ((2 * i + 2) * (2 * i + 3))
+        return acc + t, t
+
+    acc, _ = jax.lax.fori_loop(0, terms - 1, body, (x, x))
+    return acc
+
+
+@partial(jax.jit, static_argnums=(1,))
+def taylor_cos(x: jax.Array, terms: int) -> jax.Array:
+    x = jnp.asarray(x)
+    x2 = x * x
+    one = jnp.ones_like(x)
+
+    def body(i, carry):
+        acc, t = carry
+        i = i.astype(x.dtype)
+        t = -t * x2 / ((2 * i + 1) * (2 * i + 2))
+        return acc + t, t
+
+    acc, _ = jax.lax.fori_loop(0, terms - 1, body, (one, one))
+    return acc
+
+
+def make_paper_f(terms: int):
+    """f(x) = sin(cos(x)) with `terms`-term Taylor series (paper Table 1).
+
+    Returns a vectorised callable suitable for both the serial baseline and
+    the runahead speculative grid.  The paper's default is terms = 10**4.
+    """
+
+    def f(x: jax.Array) -> jax.Array:
+        return taylor_sin(taylor_cos(x, terms), terms)
+
+    return f
+
+
+# Paper Table 1 experiment constants.
+PAPER_INTERVAL = (1.0, 2.0)
+PAPER_TERMS = 10_000
+PAPER_EPS_CPU = 2.0 ** -6

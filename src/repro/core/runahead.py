@@ -1,0 +1,222 @@
+"""Runahead bisection — the paper's contribution, adapted to TPU substrates.
+
+The paper (§IV): with ``2**k - 1`` helper threads, speculatively evaluate f
+at *all* interior points of the uniform ``2**k``-partition of the current
+interval.  The sign bits of those evaluations contain the answers to the
+next ``k`` serial bisection steps, so ``k`` steps collapse into one parallel
+round: ``n`` iterations -> ``n / k`` rounds.
+
+TPU adaptation (DESIGN.md §2): the "helper threads" are VPU lanes — all
+``2**k - 1`` evaluations happen as one vectorised call.  The paper's shared
+sign array + neighbour-XOR interval selection becomes an O(k) integer index
+walk over the sign vector (trajectory-IDENTICAL to serial sign-bit
+bisection, not merely equivalent — see ``_midpoint_tree`` below).
+
+Two selection rules:
+  * ``select="walk"``  (default) — emulate the serial sign-bit trajectory
+    exactly: walk the virtual index grid for k steps.  Handles pathological
+    sign patterns (multiple roots in the interval) identically to serial.
+  * ``select="xor"``   — the paper's literal rule: pick the first adjacent
+    sign flip.  Identical to "walk" whenever the sign vector is monotone
+    (single bracketed root), which the paper assumes.
+
+Bit-exactness: serial bisection generates midpoints by the recurrence
+``mid = (a + b) / 2`` on *previously generated* endpoints.  A naive grid
+``a + (b - a) * i / 2**k`` differs from those midpoints by float ulps.  We
+instead build the speculative grid with the same midpoint recurrence,
+level by level (``_midpoint_tree``), so every speculative point is
+bit-identical to the midpoint the serial algorithm would have computed.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bisect import _sign_bit
+
+
+def _midpoint_tree(a: jax.Array, b: jax.Array, k: int) -> jax.Array:
+    """All 2**k + 1 grid points of the k-level bisection tree over (a, b).
+
+    grid[0] = a, grid[2**k] = b, and every interior point is computed as the
+    exact float midpoint of its parents — bit-identical to what serial
+    bisection would produce along any root path.  Shapes: scalars -> (2**k+1,).
+    """
+    n = 1 << k
+    grid = jnp.zeros((n + 1,), dtype=jnp.result_type(a, b))
+    grid = grid.at[0].set(a)
+    grid = grid.at[n].set(b)
+    for level in range(1, k + 1):
+        d = 1 << (k - level)
+        idx = jnp.arange(d, n, 2 * d)  # odd multiples of d
+        grid = grid.at[idx].set((grid[idx - d] + grid[idx + d]) / 2)
+    return grid
+
+
+class RunaheadState(NamedTuple):
+    lo: jax.Array          # current interval low endpoint
+    hi: jax.Array          # current interval high endpoint
+    sign_lo: jax.Array     # sign bit of f(lo)  (True = negative)
+    last_mid: jax.Array    # last midpoint "examined" (Algorithm 1's `root`)
+
+
+def _select_walk(signs: jax.Array, sign_lo: jax.Array, k: int, steps: jax.Array):
+    """Walk the virtual index grid [0, 2**k] for `steps` (<= k) serial steps.
+
+    signs[i] is the sign bit of grid point i+1 (interior points only).
+    Returns (lo_idx, hi_idx, sign_lo_new, last_mid_idx).
+    """
+    n = 1 << k
+
+    def body(j, st):
+        l, h, sl, lm = st
+        active = j < steps
+        mid = (l + h) // 2
+        smid = signs[mid - 1]
+        go_left = sl != smid
+        new_l = jnp.where(go_left, l, mid)
+        new_h = jnp.where(go_left, mid, h)
+        new_sl = jnp.where(go_left, sl, smid)
+        l = jnp.where(active, new_l, l)
+        h = jnp.where(active, new_h, h)
+        sl = jnp.where(active, new_sl, sl)
+        lm = jnp.where(active, mid, lm)
+        return l, h, sl, lm
+
+    l0 = jnp.zeros((), jnp.int32)
+    h0 = jnp.full((), n, jnp.int32)
+    lm0 = jnp.full((), n // 2, jnp.int32)
+    return jax.lax.fori_loop(0, k, body, (l0, h0, sign_lo, lm0))
+
+
+def _select_xor(signs: jax.Array, sign_lo: jax.Array, k: int):
+    """Paper's literal rule: first adjacent sign flip in the shared array.
+
+    The paper's array holds [sign(lo), interior signs..., sign(hi)]; the
+    hi-edge sign is by construction the complement of sign(lo) for a
+    bracketed root (Algorithm 1 never evaluates f(b); neither do we).
+    """
+    n = 1 << k
+    full = jnp.concatenate(
+        [sign_lo[None], signs, jnp.logical_not(sign_lo)[None]]
+    )
+    flips = full[:-1] != full[1:]                    # (2**k,) adjacency XOR
+    i = jnp.argmax(flips)                            # first flip
+    return i.astype(jnp.int32), (i + 1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
+def find_root_runahead(
+    f: Callable[[jax.Array], jax.Array],
+    a: jax.Array,
+    b: jax.Array,
+    iterations: int,
+    spec_k: int,
+    select: str = "walk",
+    multi_eval: Callable[[jax.Array], jax.Array] | None = None,
+) -> jax.Array:
+    """Runahead bisection resolving `iterations` serial steps, k per round.
+
+    Args:
+      f: scalar function; evaluated vectorised on the speculative grid
+         (``f`` must accept a vector).  Ignored if ``multi_eval`` given.
+      iterations: number of *serial-equivalent* bisection steps to resolve.
+      spec_k: speculation depth; 2**spec_k - 1 speculative points per round
+         (the paper's thread count).  rounds = ceil(iterations / spec_k),
+         with a cheaper partial walk in the last round if not divisible.
+      select: "walk" (serial-exact) or "xor" (paper's adjacent-flip rule).
+      multi_eval: optional override evaluating a *vector* of points in one
+         fused pass (the LM applications use this; see applications.py).
+
+    Returns the last midpoint examined — same contract as Algorithm 1.
+    """
+    if select not in ("walk", "xor"):
+        raise ValueError(f"unknown select {select!r}")
+    k = spec_k
+    n_pts = (1 << k) - 1
+    rounds = -(-iterations // k)  # ceil
+    evaluate = multi_eval if multi_eval is not None else f
+
+    a = jnp.asarray(a)
+    b = jnp.asarray(b, dtype=a.dtype)
+    sign_lo0 = _sign_bit(f(a) if multi_eval is None else evaluate(a[None])[0])
+    state0 = RunaheadState(a, b, sign_lo0, (a + b) / 2)
+
+    def round_body(r, state: RunaheadState) -> RunaheadState:
+        grid = _midpoint_tree(state.lo, state.hi, k)          # (2**k + 1,)
+        vals = evaluate(grid[1:-1])                           # (2**k - 1,)
+        signs = _sign_bit(vals)
+        steps = jnp.minimum(iterations - r * k, k)
+        if select == "walk":
+            li, hi_, _, lm = _select_walk(signs, state.sign_lo, k, steps)
+        else:
+            li, hi_ = _select_xor(signs, state.sign_lo, k)
+            lm = (li + hi_) // 2
+        # sign of f at the new lo endpoint: index 0 is the old lo (sign
+        # carried), interior index i has signs[i - 1].
+        full_signs = jnp.concatenate([state.sign_lo[None], signs])
+        new_sl = full_signs[li]
+        return RunaheadState(
+            lo=grid[li], hi=grid[hi_], sign_lo=new_sl, last_mid=grid[lm]
+        )
+
+    final = jax.lax.fori_loop(0, rounds, round_body, state0)
+    return final.last_mid
+
+
+def runahead_solve(
+    multi_eval: Callable[[jax.Array], jax.Array],
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    rounds: int,
+    spec_k: int,
+    sign_lo: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Generic interval solve: returns the final (lo, hi) bracket.
+
+    This is the workhorse API for the LM applications — ``multi_eval`` takes
+    the vector of 2**spec_k - 1 speculative points and returns f at each in
+    ONE fused pass (e.g. one sweep over the vocab computing all candidate
+    threshold counts).  The speculative width is the paper's thread count;
+    on TPU it is VPU-lane parallelism and is nearly free (DESIGN.md §2).
+    """
+    k = spec_k
+    if sign_lo is None:
+        sign_lo = _sign_bit(multi_eval(jnp.asarray(lo)[None])[0])
+
+    def round_body(_, carry):
+        lo, hi, sl = carry
+        grid = _midpoint_tree(lo, hi, k)
+        signs = _sign_bit(multi_eval(grid[1:-1]))
+        li, hi_, _, _ = _select_walk(signs, sl, k, jnp.int32(k))
+        full_signs = jnp.concatenate([sl[None], signs])
+        new_sl = full_signs[li]
+        return grid[li], grid[hi_], new_sl
+
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi, dtype=lo.dtype)
+    lo_f, hi_f, _ = jax.lax.fori_loop(0, rounds, round_body, (lo, hi, sign_lo))
+    return lo_f, hi_f
+
+
+def find_root_runahead_batched(
+    f: Callable[[jax.Array], jax.Array],
+    a: jax.Array,
+    b: jax.Array,
+    iterations: int,
+    spec_k: int,
+    select: str = "walk",
+) -> jax.Array:
+    """vmap over independent problems; speculation happens inside each lane
+    group, batch across the remaining lanes / the `data` mesh axis."""
+    solve = lambda ai, bi: find_root_runahead(f, ai, bi, iterations, spec_k, select)
+    return jax.vmap(solve)(jnp.asarray(a), jnp.asarray(b))
+
+
+def serial_equivalent_iterations(rounds: int, spec_k: int) -> int:
+    """Paper §IV.B: rounds r at speculation k resolve r*k serial steps."""
+    return rounds * spec_k

@@ -1,0 +1,82 @@
+"""Chip-level runahead bisection: speculative points across the mesh.
+
+This is the multicore-substrate form of the paper's scheme on a TPU pod:
+each chip along the ``model`` mesh axis plays the role of a block of helper
+threads, evaluating its shard of the 2**k - 1 speculative points.  The
+paper's shared sign-array becomes ONE tiny ``all_gather`` of sign bits
+(2**k - 1 bools) — this collective latency is the TPU analogue of the
+paper's thread-join cost and drives the Fig. 6 crossover benchmark.
+
+Implementation notes:
+  * 2**k - 1 points don't tile evenly over D devices, so the grid is padded
+    with a repeat of the last point (its sign is computed and discarded —
+    the index walk never looks past 2**k - 1).
+  * Every device runs the identical O(k) index walk on the gathered signs,
+    so the new interval is consistent everywhere with no broadcast step —
+    exactly the paper's "each thread compares its neighbours" symmetry.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.bisect import _sign_bit
+from repro.core.runahead import _midpoint_tree, _select_walk
+
+
+def find_root_runahead_sharded(
+    f: Callable[[jax.Array], jax.Array],
+    a: jax.Array,
+    b: jax.Array,
+    iterations: int,
+    spec_k: int,
+    mesh: jax.sharding.Mesh,
+    axis: str = "model",
+) -> jax.Array:
+    """Runahead bisection with speculative evals sharded over a mesh axis."""
+    k = spec_k
+    n_pts = (1 << k) - 1
+    d = mesh.shape[axis]
+    padded = -(-n_pts // d) * d
+    rounds = -(-iterations // k)
+
+    def per_device(a, b, sign_lo, last_mid):
+        # Executed under shard_map: a/b/sign_lo are replicated scalars.
+        idx = jax.lax.axis_index(axis)
+
+        def round_body(r, carry):
+            lo, hi, sl, lm = carry
+            grid = _midpoint_tree(lo, hi, k)                  # replicated
+            interior = grid[1:-1]
+            pad = jnp.full((padded - n_pts,), interior[-1], interior.dtype)
+            pts = jnp.concatenate([interior, pad])
+            my = jax.lax.dynamic_slice(pts, (idx * (padded // d),),
+                                       (padded // d,))
+            my_signs = _sign_bit(f(my))                       # local evals
+            signs = jax.lax.all_gather(my_signs, axis, tiled=True)[:n_pts]
+            steps = jnp.minimum(iterations - r * k, k)
+            li, hi_, _, lmi = _select_walk(signs, sl, k, steps)
+            full_signs = jnp.concatenate([sl[None], signs])
+            return grid[li], grid[hi_], full_signs[li], grid[lmi]
+
+        lo, hi, sl, lm = jax.lax.fori_loop(
+            0, rounds, round_body, (a, b, sign_lo, last_mid)
+        )
+        return lm
+
+    a = jnp.asarray(a)
+    b = jnp.asarray(b, dtype=a.dtype)
+    sign_lo = _sign_bit(f(a[None])[0])
+
+    shmapped = jax.shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(shmapped)(a, b, sign_lo, (a + b) / 2)

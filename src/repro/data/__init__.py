@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokens, make_train_iterator
+
+__all__ = ["SyntheticTokens", "make_train_iterator"]

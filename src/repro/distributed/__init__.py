@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    axis_rules,
+    current_rules,
+    logical_sharding,
+    shard,
+    TRAIN_RULES,
+    SERVE_RULES,
+)
+
+__all__ = [
+    "axis_rules",
+    "current_rules",
+    "logical_sharding",
+    "shard",
+    "TRAIN_RULES",
+    "SERVE_RULES",
+]

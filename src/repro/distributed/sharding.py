@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules (flax-style) decoupling models from meshes.
+
+Model code annotates tensors with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``); a rules context maps logical names
+to mesh axes at trace time.  Outside any rules context the annotations are
+no-ops, so unit tests and CPU smoke runs never touch device state.
+
+The production mapping (DESIGN.md §5):
+  batch    -> ("pod", "data")     data parallel over pods × pod-local DP
+  embed    -> None                residual stream replicated
+  seq      -> "model"             sequence parallelism between blocks
+  heads    -> "model"             tensor parallelism (attention)
+  kv_heads -> "model" when divisible (decode path falls back to seq)
+  ffn      -> "model"             tensor parallelism (MLP hidden)
+  vocab    -> "model"             sharded embed/unembed + logits
+  expert   -> "model"             expert parallelism (MoE, padded experts)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# rule-sets: logical axis -> mesh axis (or tuple of mesh axes) or None
+TRAIN_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",       # sequence-parallel residual stream
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_ffn": None,
+}
+
+SERVE_RULES: dict[str, object] = dict(TRAIN_RULES)
+SERVE_RULES.update({
+    "batch": ("pod", "data"),
+    # the ring cache shards its sequence dim over `model` (kv-heads rarely
+    # divide a 16-way axis — DESIGN.md §5); decode attention reduces over
+    # the sharded seq axis with tiny softmax/output collectives.
+    "cache_seq": "model",
+    "kv_heads": None,
+    "seq_sp": None,          # decode residual is tiny; keep replicated
+})
+
+
+def _mesh_axes(mesh: jax.sharding.Mesh, spec) -> object:
+    """Drop rule entries whose mesh axis is absent (e.g. single-pod mesh
+    has no 'pod' axis) so one rule-set serves every mesh shape."""
+    names = set(mesh.axis_names)
+    if spec is None:
+        return None
+    if isinstance(spec, tuple):
+        kept = tuple(s for s in spec if s in names)
+        return kept if kept else None
+    return spec if spec in names else None
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Mapping[str, object], mesh: jax.sharding.Mesh):
+    """Activate a logical->mesh mapping for the enclosed trace."""
+    prev = getattr(_state, "rules", None)
+    _state.rules = (dict(rules), mesh)
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+def logical_axis_size(logical: str) -> int:
+    """Mesh-axis product a logical axis maps to under the active rules
+    (1 when no rules are active) — lets model code pick shard-friendly
+    algorithm variants (e.g. GQA repeat vs grouped flash attention)."""
+    active = current_rules()
+    if active is None:
+        return 1
+    rules, mesh = active
+    return _axis_size(mesh, _mesh_axes(mesh, rules.get(logical)))
+
+
+def logical_sharding(mesh, rules, *logical_axes) -> NamedSharding:
+    spec = P(*(_mesh_axes(mesh, rules.get(a)) for a in logical_axes))
+    return NamedSharding(mesh, spec)
+
+
+def _axis_size(mesh: jax.sharding.Mesh, spec) -> int:
+    if spec is None:
+        return 1
+    if isinstance(spec, tuple):
+        n = 1
+        for s in spec:
+            n *= mesh.shape[s]
+        return n
+    return mesh.shape[spec]
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Annotate x with the active rules; identity when none are active.
+
+    Dims whose size does not divide the mapped mesh-axis product fall back
+    to replicated (e.g. 8 kv-heads over a 16-way model axis) — uneven GSPMD
+    padding is legal but wastes half the axis, so we prefer letting GSPMD
+    pick the layout for those dims (DESIGN.md §5).
+    """
+    active = current_rules()
+    if active is None:
+        return x
+    rules, mesh = active
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard(): {len(logical_axes)} axes for rank-{x.ndim} tensor"
+        )
+    parts = []
+    for dim, a in enumerate(logical_axes):
+        m = _mesh_axes(mesh, rules.get(a) if a else None)
+        if m is not None and x.shape[dim] % _axis_size(mesh, m) != 0:
+            m = None
+        parts.append(m)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts))
+    )

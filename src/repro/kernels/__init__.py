@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical hot spots (DESIGN.md §2).
+
+Each kernel module pairs with a pure-jnp oracle in ``ref.py``; ``ops.py``
+holds the public jit'd wrappers (interpret-mode on non-TPU backends).
+
+  multi_count.py         one-round multi-threshold count over tiled vocab
+  runahead_threshold.py  FUSED multi-round runahead top-k solve (VMEM rows)
+  taylor_eval.py         speculative-grid Taylor eval (paper case study)
+  flash_fwd.py           flash-attention forward (VMEM score tiles, §Perf B4)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

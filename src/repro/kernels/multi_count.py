@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: multi-threshold count over a tiled vocab.
+
+The paper's "function evaluation" for the LM threshold solves is
+``count(logits > tau)`` — one pass over the vocab.  Runahead bisection asks
+for that count at 2**k - 1 candidate thresholds per round; this kernel
+answers ALL candidates in a single tiled sweep, so the speculative width
+(the paper's thread count) rides along the VPU lane dimension for free.
+
+Layout (TPU target):
+  * grid = (B, V // BLOCK_V): one batch row per grid row, vocab tiled.
+  * logits block (1, BLOCK_V) streamed HBM -> VMEM per grid step.
+  * taus block (1, M_pad) resident per row (M_pad = lane-padded candidates —
+    the paper's false-sharing 2-D padding becomes lane alignment here).
+  * out block (1, M_pad) revisited across the vocab axis: zeroed at the
+    first tile, accumulated afterwards (standard Pallas reduction pattern).
+
+Vocab padding: the wrapper pads logits with -inf, which can never exceed a
+finite threshold, so padded lanes contribute zero to every count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_V = 2048   # vocab tile per grid step (f32: 8 KiB — deep in VMEM budget)
+LANE = 128       # TPU lane width; candidate dim padded to a multiple
+
+
+def _kernel(logits_ref, taus_ref, out_ref):
+    v_step = pl.program_id(1)
+
+    @pl.when(v_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    block = logits_ref[...]                       # (1, BLOCK_V)
+    taus = taus_ref[...]                          # (1, M_pad)
+    # (1, M_pad, BLOCK_V) compare — fused by Mosaic into VPU ops; the
+    # reduction folds the vocab tile into the per-candidate partial count.
+    hits = block[:, None, :] > taus[:, :, None]
+    out_ref[...] += jnp.sum(hits, axis=-1).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def multi_count(logits: jax.Array, taus: jax.Array, *, interpret: bool = False):
+    """counts[b, m] = #{v : logits[b, v] > taus[b, m]}.
+
+    logits: (B, V) float32;  taus: (B, M) float32  ->  (B, M) float32.
+    """
+    B, V = logits.shape
+    _, M = taus.shape
+    m_pad = -(-M // LANE) * LANE
+    v_pad = -(-V // BLOCK_V) * BLOCK_V
+    logits_p = jnp.pad(logits, ((0, 0), (0, v_pad - V)),
+                       constant_values=-jnp.inf)
+    # Padded candidates get +inf thresholds -> count 0, discarded below.
+    taus_p = jnp.pad(taus, ((0, 0), (0, m_pad - M)), constant_values=jnp.inf)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(B, v_pad // BLOCK_V),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_V), lambda b, v: (b, v)),
+            pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m_pad), jnp.float32),
+        interpret=interpret,
+    )(logits_p, taus_p)
+    return out[:, :M]

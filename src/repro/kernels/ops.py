@@ -1,0 +1,37 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; elsewhere (this CPU
+container) they run in interpret mode, which executes the kernel body in
+Python for correctness validation — the BlockSpec tiling is identical.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import multi_count as _mc
+from repro.kernels import runahead_threshold as _rt
+from repro.kernels import taylor_eval as _te
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def multi_count(logits: jax.Array, taus: jax.Array) -> jax.Array:
+    """Fused multi-threshold count (one vocab sweep, all candidates)."""
+    return _mc.multi_count(logits, taus, interpret=_interpret())
+
+
+def runahead_topk_threshold(
+    logits: jax.Array, *, k_target: int, rounds: int = 8, spec_k: int = 5
+):
+    """Fully fused multi-round runahead top-k bracket (VMEM-resident rows)."""
+    return _rt.runahead_topk_threshold(
+        logits, k_target=k_target, rounds=rounds, spec_k=spec_k,
+        interpret=_interpret(),
+    )
+
+
+def taylor_sincos_eval(x: jax.Array, *, terms: int) -> jax.Array:
+    """Speculative-grid evaluation of the paper's sin(cos(x)) Taylor f."""
+    return _te.taylor_sincos_eval(x, terms=terms, interpret=_interpret())

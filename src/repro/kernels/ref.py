@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paper_functions import taylor_cos, taylor_sin
+from repro.core.runahead import runahead_solve
+
+
+def multi_count_ref(logits: jax.Array, taus: jax.Array) -> jax.Array:
+    """counts[b, m] = #{v : logits[b, v] > taus[b, m]}  (float32)."""
+    return jnp.sum(
+        logits[:, None, :] > taus[:, :, None], axis=-1
+    ).astype(jnp.float32)
+
+
+def runahead_topk_threshold_ref(
+    logits: jax.Array, *, k_target: int, rounds: int = 8, spec_k: int = 5
+) -> tuple[jax.Array, jax.Array]:
+    """Row-wise runahead top-k bracket using the core (unfused) solver."""
+
+    def solve_row(row):
+        lo0 = jnp.min(row) - 1.0
+        hi0 = jnp.max(row) + 1.0
+
+        def multi_eval(taus):
+            counts = jnp.sum(row[None, :] > taus[:, None], axis=-1)
+            return jnp.float32(k_target) - counts.astype(jnp.float32)
+
+        return runahead_solve(multi_eval, lo0, hi0, rounds=rounds,
+                              spec_k=spec_k)
+
+    lo, hi = jax.vmap(solve_row)(logits.astype(jnp.float32))
+    return lo, hi
+
+
+def taylor_sincos_ref(x: jax.Array, *, terms: int) -> jax.Array:
+    return taylor_sin(taylor_cos(x.astype(jnp.float32), terms), terms)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: FUSED multi-round runahead top-k threshold solve.
+
+Beyond-paper optimisation (DESIGN.md §2.1): runahead bisection reduces
+*rounds* (n -> n/k); this kernel additionally makes every round after the
+first **HBM-free** by keeping the batch row's logits resident in VMEM and
+running the whole round loop inside the kernel.  The un-fused path streams
+the vocab from HBM once per round (rounds × V × 4 bytes); the fused path
+streams it exactly once.
+
+  HBM traffic:  unfused  = rounds · V · 4 B   per row
+                fused    =           V · 4 B   per row      (rounds× less)
+
+VMEM budget: one row of a 152 k vocab in f32 is 608 KiB — comfortably
+VMEM-resident; the speculative grid (2**k - 1 candidates) lives in
+registers/VMEM scratch.
+
+Grid = (B,): one batch row per program.  Outputs the final (lo, hi) bracket
+of the k-th largest logit, lane 0 / lane 1 of a lane-padded output row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _midpoint_grid(lo, hi, spec_k: int):
+    """2**spec_k + 1 bisection-tree grid points (scalars -> vector)."""
+    n = 1 << spec_k
+    pts = [None] * (n + 1)
+    pts[0], pts[n] = lo, hi
+    for level in range(1, spec_k + 1):
+        d = 1 << (spec_k - level)
+        for m in range(d, n, 2 * d):
+            pts[m] = (pts[m - d] + pts[m + d]) / 2
+    return pts
+
+
+def _make_kernel(k_target: int, rounds: int, spec_k: int, v_real: int):
+    n = 1 << spec_k
+
+    def kernel(logits_ref, out_ref):
+        row = logits_ref[...]                                  # (1, V) VMEM
+        # Lane-padding mask: only the first v_real lanes are real logits.
+        valid = jax.lax.broadcasted_iota(jnp.int32, row.shape, 1) < v_real
+        lo0 = jnp.min(jnp.where(valid, row, jnp.inf)) - 1.0
+        hi0 = jnp.max(jnp.where(valid, row, -jnp.inf)) + 1.0
+        kf = jnp.float32(k_target)
+
+        def count_above(tau):
+            return jnp.sum(jnp.where(valid & (row > tau), 1.0, 0.0))
+
+        # sign bit of f(lo) = k - count(> lo):  count = V  ->  negative.
+        sign_lo0 = (kf - count_above(lo0)) < 0
+
+        def round_body(_, carry):
+            lo, hi, sl = carry
+            pts = _midpoint_grid(lo, hi, spec_k)
+            # All 2**k - 1 speculative evaluations against the VMEM-resident
+            # row — the paper's helper threads, zero extra HBM traffic.
+            signs = [(kf - count_above(pts[m])) < 0 for m in range(1, n)]
+            # Serial-exact index walk, statically unrolled spec_k steps with
+            # traced index selects (the path is data-dependent).
+            sign_vec = jnp.stack([jnp.where(s, 1, 0) for s in [sl] + signs])
+            li = jnp.int32(0)
+            hi_i = jnp.int32(n)
+            s_cur = sign_vec[0]
+            for _step in range(spec_k):
+                mid = (li + hi_i) // 2
+                s_m = sign_vec[mid]          # sign_vec[i] = sign of grid pt i
+                go_left = s_cur != s_m
+                hi_i = jnp.where(go_left, mid, hi_i)
+                li = jnp.where(go_left, li, mid)
+                s_cur = jnp.where(go_left, s_cur, s_m)
+            pts_vec = jnp.stack(pts)
+            new_lo = pts_vec[li]
+            new_hi = pts_vec[hi_i]
+            new_sl = sign_vec[li] == 1
+            return new_lo, new_hi, new_sl
+
+        lo_f, hi_f, _ = jax.lax.fori_loop(
+            0, rounds, round_body, (lo0, hi0, sign_lo0)
+        )
+        out = jnp.zeros((1, LANE), jnp.float32)
+        out = out.at[0, 0].set(lo_f)
+        out = out.at[0, 1].set(hi_f)
+        out_ref[...] = out
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_target", "rounds", "spec_k", "interpret")
+)
+def runahead_topk_threshold(
+    logits: jax.Array,
+    *,
+    k_target: int,
+    rounds: int = 8,
+    spec_k: int = 5,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused solve: logits (B, V) -> (lo, hi) each (B,), bracketing the
+    k-th largest value per row.  rounds × spec_k serial-equivalent steps."""
+    B, V = logits.shape
+    v_pad = -(-V // LANE) * LANE
+    logits_p = jnp.pad(logits.astype(jnp.float32), ((0, 0), (0, v_pad - V)))
+
+    out = pl.pallas_call(
+        _make_kernel(k_target, rounds, spec_k, V),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, v_pad), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((1, LANE), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, LANE), jnp.float32),
+        interpret=interpret,
+    )(logits_p)
+    return out[:, 0], out[:, 1]

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: speculative-grid Taylor evaluation (paper case study).
+
+Evaluates the paper's f(x) = sin(cos(x)) (Taylor series, `terms` knob) at a
+vector of speculative points — the 2**k - 1 "helper threads" of one runahead
+round — entirely on the VPU.  One program instance handles a lane-padded
+vector of points; the term recurrence is a fori_loop of fused multiply-adds,
+which is the same O(terms) cost model as the paper's scalar thread, but over
+all speculative points at once (the paper's thread pool collapses into the
+8×128 vector registers; DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _make_kernel(terms: int):
+    def kernel(x_ref, out_ref):
+        x = x_ref[...]                        # (1, LANE·n) points
+
+        # cos(x) by Taylor recurrence: t_{i+1} = -t_i x² / ((2i+1)(2i+2))
+        x2 = x * x
+
+        def cos_body(i, carry):
+            acc, t = carry
+            fi = i.astype(x.dtype)
+            t = -t * x2 / ((2 * fi + 1) * (2 * fi + 2))
+            return acc + t, t
+
+        one = jnp.ones_like(x)
+        c, _ = jax.lax.fori_loop(0, terms - 1, cos_body, (one, one))
+
+        # sin(c) by Taylor recurrence: t_{i+1} = -t_i c² / ((2i+2)(2i+3))
+        c2 = c * c
+
+        def sin_body(i, carry):
+            acc, t = carry
+            fi = i.astype(x.dtype)
+            t = -t * c2 / ((2 * fi + 2) * (2 * fi + 3))
+            return acc + t, t
+
+        s, _ = jax.lax.fori_loop(0, terms - 1, sin_body, (c, c))
+        out_ref[...] = s
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("terms", "interpret"))
+def taylor_sincos_eval(
+    x: jax.Array, *, terms: int, interpret: bool = False
+) -> jax.Array:
+    """sin(cos(x)) via `terms`-term Taylor series; x: (M,) -> (M,)."""
+    (m,) = x.shape
+    m_pad = -(-m // LANE) * LANE
+    xp = jnp.pad(x.astype(jnp.float32), (0, m_pad - m)).reshape(1, m_pad)
+    out = pl.pallas_call(
+        _make_kernel(terms),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, m_pad), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, m_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, m_pad), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[0, :m]

@@ -1,0 +1,373 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape) cell on the production meshes and extract the
+roofline terms from the compiled artifact.
+
+MUST be run as a script / module — the two lines above must execute before
+any other import initialises jax, because jax locks the device count on
+first use.  Never import this module from tests.
+
+Per cell we record (EXPERIMENTS.md §Dry-run):
+  * memory_analysis(): bytes per device (proves the cell fits),
+  * cost_analysis(): HLO FLOPs + bytes accessed,
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute parsed from the
+    compiled HLO text (cost_analysis has no collective term),
+  * the collective op histogram (the schedule fingerprint).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out dryrun.json
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import (
+    ARCH_IDS,
+    SHAPES,
+    get_config,
+    input_shapes,
+    skipped_shapes,
+)
+from repro.distributed.sharding import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    axis_rules,
+    logical_sharding,
+)
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (
+    batch_shardings,
+    make_cache_shardings,
+    make_opt_state_shardings,
+    make_param_shardings,
+)
+from repro.models import decode as decode_lib
+from repro.models import transformer as tfm
+from repro.optim.schedule import linear_warmup_cosine
+from repro.train.step import TrainConfig, make_train_step
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z]*\b"
+)
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([\d,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def collective_bytes_from_hlo(hlo: str) -> tuple[float, dict]:
+    """Sum output-shape bytes of every collective op in the POST-SPMD HLO
+    (``compiled.as_text()`` — the lowered module has no collectives yet).
+
+    Convention: bytes = the op's output shape size per participating device
+    (async ``-start``/``-done`` pairs counted once, on the start).  This is
+    the payload entering the interconnect, not the algorithm-dependent
+    wire traffic (a ring all-reduce moves ~2x); the roofline uses it
+    consistently for baseline-vs-optimised comparisons.
+    """
+    total = 0.0
+    histo: dict[str, int] = {}
+    for line in hlo.splitlines():
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        m = _COLL_RE.search(rhs[:120])
+        if not m or "-done" in m.group(0):
+            continue
+        op = m.group(1)
+        histo[op] = histo.get(op, 0) + 1
+        # output shape(s) appear between '=' and the op name; async starts
+        # produce a tuple — count the result buffer (largest entry).
+        sizes = []
+        for dt, dims in _SHAPE_RE.findall(rhs.split(m.group(0))[0]):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            sizes.append(n * _BYTES.get(dt, 4))
+        if sizes:
+            total += max(sizes)
+    return total, histo
+
+
+def _mem_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[f] = int(getattr(ma, f, 0) or 0)
+    return out
+
+
+def _cost_stats(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def build_step(arch: str, shape_name: str, mesh, *, kv_int8: bool = False,
+               with_sampler: bool = False, zero_grads: bool = False):
+    """Returns (jitted_fn, example_args_specs) for one cell.
+
+    kv_int8: quantised KV cache (decode cells) — §Perf memory-term lever.
+    with_sampler: fuse the runahead-bisection top-k sampler into the decode
+    step so the lowered artifact contains the paper's technique.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = TRAIN_RULES if shape.kind == "train" else SERVE_RULES
+    ins = specs_lib.input_specs(arch, shape)
+    params = specs_lib.params_specs(cfg)
+    p_sh = make_param_shardings(mesh, params)
+
+    if shape.kind == "train":
+        tc = TrainConfig(n_microbatches=1, remat=True,
+                         moe_groups=_dp_size(mesh))
+        lr_fn = linear_warmup_cosine(3e-4, 100, 1000)
+        grad_constraint = None
+        if zero_grads:
+            from repro.launch.shardings import zero1_spec
+
+            def grad_constraint(grads):
+                def fn(path, g):
+                    ns = jax.sharding.NamedSharding(
+                        mesh, zero1_spec(path, g, mesh))
+                    return jax.lax.with_sharding_constraint(g, ns)
+
+                return jax.tree_util.tree_map_with_path(fn, grads)
+        step = make_train_step(cfg, tc, lr_fn, grad_constraint)
+        opt = specs_lib.opt_state_specs(cfg)
+        o_sh = make_opt_state_shardings(mesh, opt, params)
+        b_sh = batch_shardings(mesh, ins["batch"])
+
+        def wrapped(params, opt_state, batch):
+            with axis_rules(rules, mesh):
+                return step(params, opt_state, batch)
+
+        fn = jax.jit(
+            wrapped,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params, opt, ins["batch"])
+        return fn, args
+
+    if shape.kind == "prefill":
+        t_sh = batch_shardings(mesh, {"tokens": ins["tokens"]})["tokens"]
+        cache = specs_lib.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        c_sh = make_cache_shardings(mesh, cache)
+        l_sh = _logits_sharding(mesh, rules, cfg, shape.global_batch)
+        in_sh = {"tokens": t_sh}
+        if "frames" in ins:
+            in_sh["frames"] = batch_shardings(
+                mesh, {"frames": ins["frames"]})["frames"]
+        moe_groups = _dp_size(mesh)
+
+        def wrapped(params, inputs):
+            with axis_rules(rules, mesh):
+                return decode_lib.prefill(
+                    cfg, params, inputs["tokens"], shape.seq_len,
+                    encoder_frames=inputs.get("frames"),
+                    moe_groups=moe_groups,
+                )
+
+        fn = jax.jit(
+            wrapped,
+            in_shardings=(p_sh, in_sh),
+            out_shardings=(l_sh, c_sh),
+        )
+        return fn, (params, ins)
+
+    # decode
+    if kv_int8:
+        ins["cache"] = specs_lib.cache_specs(
+            cfg, shape.global_batch, shape.seq_len, jnp.int8
+        )
+    cache = ins["cache"]
+    c_sh = make_cache_shardings(mesh, cache)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tok_spec = jax.sharding.PartitionSpec(
+        dp if ins["token"].shape[0] % _dp_size(mesh) == 0 else None
+    )
+    t_sh = jax.sharding.NamedSharding(mesh, tok_spec)
+    pos_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    l_sh = _logits_sharding(mesh, rules, cfg, shape.global_batch)
+
+    if with_sampler:
+        from repro.serving.sampler import SamplerConfig, sample
+
+        sc = SamplerConfig(top_k=50, spec_k=5, rounds=6)
+        key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        tok_out_sh = t_sh
+
+        def wrapped(params, token, pos, cache, key):
+            with axis_rules(rules, mesh):
+                logits, cache = decode_lib.decode_step(cfg, params, token,
+                                                       pos, cache)
+                return sample(logits, key, sc), cache
+
+        fn = jax.jit(
+            wrapped,
+            in_shardings=(p_sh, t_sh, pos_sh, c_sh, pos_sh),
+            out_shardings=(tok_out_sh, c_sh),
+            donate_argnums=(3,),
+        )
+        return fn, (params, ins["token"], ins["pos"], cache, key_spec)
+
+    def wrapped(params, token, pos, cache):
+        with axis_rules(rules, mesh):
+            return decode_lib.decode_step(cfg, params, token, pos, cache)
+
+    fn = jax.jit(
+        wrapped,
+        in_shardings=(p_sh, t_sh, pos_sh, c_sh),
+        out_shardings=(l_sh, c_sh),
+        donate_argnums=(3,),
+    )
+    return fn, (params, ins["token"], ins["pos"], cache)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _logits_sharding(mesh, rules, cfg, batch: int):
+    """(B, V_pad) logits: batch over dp when divisible, vocab over model."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b = dp if (dp and batch % _dp_size(mesh) == 0) else None
+    v = "model" if cfg.vocab_padded % mesh.shape["model"] == 0 else None
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(b, v))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             kv_int8: bool = False, with_sampler: bool = False,
+             zero_grads: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args = build_step(arch, shape_name, mesh, kv_int8=kv_int8,
+                          with_sampler=with_sampler, zero_grads=zero_grads)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+    # Loop-aware costs parsed from the post-SPMD module: XLA's aggregate
+    # cost_analysis counts while bodies ONCE (a 62-layer scan undercounts
+    # 62x) — hlo_cost multiplies per-computation costs by trip counts.
+    from repro.launch.hlo_cost import analyse_hlo
+
+    parsed = analyse_hlo(compiled.as_text())
+    xla = _cost_stats(compiled)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(mesh.size),
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": _mem_stats(compiled),
+        "cost": {
+            "flops": parsed["flops"],
+            "bytes_accessed": parsed["bytes_accessed"],
+            "xla_flops_unrolled_once": xla["flops"],
+            "xla_bytes_unrolled_once": xla["bytes_accessed"],
+        },
+        "collective_bytes": parsed["collective_bytes"],
+        "collectives": parsed["collectives"],
+    }
+    print(
+        f"[dryrun] {arch:22s} {shape_name:12s} mesh={result['mesh']:8s} "
+        f"flops={result['cost']['flops']:.3e} "
+        f"bytes={result['cost']['bytes_accessed']:.3e} "
+        f"coll={result['collective_bytes']:.3e} "
+        f"temp={result['memory']['temp_size_in_bytes']/2**30:.2f}GiB "
+        f"compile={t_compile:.0f}s",
+        flush=True,
+    )
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"],
+                    default="off")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--sampler", action="store_true")
+    ap.add_argument("--zero-grads", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in input_shapes(arch):
+                cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    pods = {"on": [True], "off": [False], "both": [False, True]}[
+        args.multi_pod
+    ]
+    results = []
+    failures = 0
+    for arch, shape_name in cells:
+        for mp in pods:
+            try:
+                results.append(run_cell(arch, shape_name, mp,
+                                        kv_int8=args.kv_int8,
+                                        with_sampler=args.sampler,
+                                        zero_grads=args.zero_grads))
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                traceback.print_exc()
+                results.append({
+                    "arch": arch, "shape": shape_name,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "ok": False, "error": f"{type(e).__name__}: {e}",
+                })
+                print(f"[dryrun] FAIL {arch} {shape_name} mp={mp}: {e}",
+                      flush=True)
+    # record documented skips
+    skips = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name, reason in skipped_shapes(arch).items():
+                skips.append({"arch": arch, "shape": shape_name,
+                              "skipped": reason})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "skips": skips}, f, indent=1)
+        print(f"[dryrun] wrote {args.out}", flush=True)
+    print(f"[dryrun] {len(results)} cells, {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

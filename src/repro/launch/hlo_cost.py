@@ -1,0 +1,315 @@
+"""Loop-aware cost extraction from post-SPMD HLO text.
+
+``compiled.cost_analysis()`` reports each computation ONCE — a scan over 62
+layers contributes its body a single time, undercounting FLOPs/bytes by the
+trip count (and the same for collectives living inside the loop).  This
+module parses the HLO text, builds the call graph with execution
+multipliers (while trip counts, call/fusion/conditional inheritance), and
+accumulates:
+
+  * flops: 2 * prod(out_shape) * prod(contracting dims) per dot op
+           (+ convolution macs when present),
+  * bytes: per top-level instruction, output + operand bytes — the
+           post-optimisation HLO is fusion-granular, so this models HBM
+           traffic at the fusion boundary (XLA's own convention),
+  * collective_bytes + histogram, multiplied by execution count.
+
+Trip counts are recovered from the loop-condition computation's integer
+constants (jax scans compare an induction var against a literal).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_CALLEE = re.compile(
+    r"(?:to_apply|body|condition|branch_computations|called_computations"
+    r"|calls)=\{?%?([\w\.\-,% ]+)\}?"
+)
+_COLL = re.compile(
+    r"^(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+
+def _tuple_shapes(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    """All leaf shapes in a (possibly tuple) HLO type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(text: str) -> int:
+    total = 0
+    for dt, shape in _tuple_shapes(text):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    out_type: str
+    op: str
+    rest: str
+    operands: list[str] = field(default_factory=list)
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)     # var -> out_type str
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+            # header param lists may contain nested tuple parens which defeat
+            # a regex; the computation name is simply the first token.
+            toks = line.strip().split()
+            tok = toks[1] if toks[0] == "ENTRY" else toks[0]
+            name = tok.lstrip("%").split("(")[0]
+            if name:
+                cur = Computation(name)
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            # keep cur; nested braces don't occur at instruction level
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            # parameter declarations: "%p = f32[..] parameter(0)"
+            continue
+        name, out_type, op, rest = m.groups()
+        operands = re.findall(r"%([\w\.\-]+)", rest.split("),")[0])
+        ins = Instr(name, out_type, op, rest, operands,
+                    is_root=line.lstrip().startswith("ROOT"))
+        cur.instrs.append(ins)
+        cur.shapes[name] = out_type
+        # parameters also matched by _INSTR (op == "parameter")
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.op + "(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def execution_counts(comps: dict[str, Computation]) -> dict[str, float]:
+    entry = None
+    for name, c in comps.items():
+        if any(i.op == "parameter" for i in c.instrs) or True:
+            pass
+    # entry computation: the one never referenced as a callee
+    callees = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            for m in _CALLEE.finditer(ins.rest):
+                for nm in re.findall(r"[\w\.\-]+", m.group(1)):
+                    callees.add(nm)
+    roots = [n for n in comps if n not in callees]
+    mult = {n: 0.0 for n in comps}
+    for r in roots:
+        mult[r] = 1.0
+
+    # propagate in dependency order (iterate to fixpoint; graphs are DAGs)
+    for _ in range(len(comps) + 2):
+        changed = False
+        for name, c in comps.items():
+            base = mult.get(name, 0.0)
+            if base == 0.0:
+                continue
+            for ins in c.instrs:
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                if ins.op == "while" and mb and mc:
+                    body, cond = mb.group(1), mc.group(1)
+                    trips = _trip_count(comps[cond]) if cond in comps else 1
+                    for tgt, k in ((body, trips), (cond, trips + 1)):
+                        if tgt in comps:
+                            want = base * k
+                            if mult[tgt] < want:
+                                mult[tgt] = want
+                                changed = True
+                else:
+                    for m in _CALLEE.finditer(ins.rest):
+                        for nm in re.findall(r"[\w\.\-]+", m.group(1)):
+                            if nm in comps and mult[nm] < base:
+                                mult[nm] = base
+                                changed = True
+        if not changed:
+            break
+    return mult
+
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_bytes(ins: Instr, comp: Computation,
+                  comps: dict[str, Computation]) -> float:
+    """Total HBM bytes for a fusion, honouring in-place/slice semantics:
+
+    * operands consumed ONLY by slice/gather ops inside the fused
+      computation charge the slice-output size (a scan body slicing its
+      stacked xs/weights reads one layer, not the whole stack per step);
+    * a fusion whose ROOT is dynamic-update-slice aliases its big operand
+      in place: charge 2x the update region, not the full output (a
+      4096-step sLSTM scan otherwise charges the full (S,B,D) ys buffer
+      EVERY step — observed 420 TB phantom traffic).
+    """
+    m = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+    fc = comps.get(m.group(1)) if m else None
+    if fc is None:
+        return _nbytes(ins.out_type) + sum(
+            _nbytes(comp.shapes.get(o, "")) for o in ins.operands
+        )
+    by_idx: dict[int, str] = {}
+    root: Instr | None = None
+    for i2 in fc.instrs:
+        if i2.op == "parameter":
+            try:
+                by_idx[int(i2.rest.split(")")[0])] = i2.name
+            except ValueError:
+                pass
+        if i2.is_root:
+            root = i2
+    dus_root = root is not None and root.op == "dynamic-update-slice"
+    aliased_param = (root.operands[0] if dus_root and root.operands
+                     else None)
+
+    if dus_root and root is not None and len(root.operands) > 1:
+        out_bytes = 2.0 * _nbytes(fc.shapes.get(root.operands[1], ""))
+    else:
+        out_bytes = _nbytes(ins.out_type)
+
+    total = out_bytes
+    for j, opnd in enumerate(ins.operands):
+        full = _nbytes(comp.shapes.get(opnd, ""))
+        pname = by_idx.get(j)
+        if pname is None:
+            total += full
+            continue
+        if pname == aliased_param:
+            continue  # in-place destination, charged via the update region
+        consumers = [i3 for i3 in fc.instrs
+                     if pname in i3.operands and i3.op != "parameter"]
+        if consumers and all(c.op in _SLICE_OPS for c in consumers):
+            total += min(full, sum(_nbytes(c.out_type) for c in consumers))
+        else:
+            total += full
+    return total
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_shapes = _tuple_shapes(ins.out_type)
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    # contracting dims from the lhs operand shape
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    lhs = ins.operands[0] if ins.operands else None
+    lhs_type = comp.shapes.get(lhs)
+    if mdims and lhs_type:
+        shapes = _tuple_shapes(lhs_type)
+        if shapes:
+            lshape = shapes[0][1]
+            k = 1
+            for d in mdims.group(1).split(","):
+                if d and int(d) < len(lshape):
+                    k *= lshape[int(d)]
+            return 2.0 * out_elems * k
+    return 2.0 * out_elems  # fallback: no contracting info
+
+
+def analyse_hlo(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    mult = execution_counts(comps)
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll_bytes = 0.0
+    coll_histo: dict[str, float] = {}
+    # Bytes are charged only for compute / data-movement ops.  The CPU
+    # backend materialises every elementwise intermediate a TPU lowering
+    # would fuse, so charging all ops would model CPU HBM traffic, not the
+    # TPU target's (EXPERIMENTS.md §Dry-run conventions).
+    _BYTE_OPS = {
+        "dot", "convolution", "custom-call", "fusion", "reduce",
+        "reduce-window", "scatter", "gather", "dynamic-update-slice",
+        "dynamic-slice", "slice", "sort", "copy", "concatenate",
+        "select-and-scatter", "cholesky", "triangular-solve",
+    }
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for ins in c.instrs:
+            if ins.op in ("dot", "convolution"):
+                flops += m * _dot_flops(ins, c)
+            cm = _COLL.match(ins.op)
+            if cm and not ins.op.endswith("-done"):
+                b = _nbytes(ins.out_type)
+                coll_bytes += m * b
+                coll_histo[cm.group(1)] = coll_histo.get(cm.group(1), 0) + m
+            if ins.op in _BYTE_OPS:
+                b_out = _nbytes(ins.out_type)
+                if ins.op in ("dynamic-slice", "gather", "slice"):
+                    # reads only the sliced region (= output), not the
+                    # source array (a scan slicing stacked layer weights
+                    # would otherwise charge the full 62-layer stack PER
+                    # LAYER — observed 16x inflation).
+                    bytes_accessed += m * (2 * b_out)
+                elif ins.op in ("dynamic-update-slice", "scatter"):
+                    # read-modify-write of the update region only (the
+                    # big buffer is aliased in place).
+                    upd = (_nbytes(c.shapes.get(ins.operands[1], ""))
+                           if len(ins.operands) > 1 else b_out)
+                    bytes_accessed += m * (2 * upd)
+                elif ins.op == "fusion":
+                    bytes_accessed += m * _fusion_bytes(ins, c, comps)
+                else:
+                    b_in = sum(_nbytes(c.shapes.get(o, ""))
+                               for o in ins.operands)
+                    bytes_accessed += m * (b_out + b_in)
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "collective_bytes": coll_bytes,
+        "collectives": {k: int(v) for k, v in coll_histo.items()},
+        "n_computations": len(comps),
+    }

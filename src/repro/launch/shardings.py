@@ -1,0 +1,188 @@
+"""Parameter / optimizer-state / batch / cache shardings (DESIGN.md §5).
+
+Specs are derived from pytree PATH NAMES + shapes, with a divisibility
+guard: any dim that does not divide its mesh-axis product is left
+unpartitioned (GSPMD chooses).  Layer-stacked leaves (scan) get their spec
+left-padded with None for the leading layer axis.
+
+  TP (model axis): attention/MLP hidden, vocab, experts, SSM channels.
+  DP (pod, data):  batch dims of inputs and caches.
+  ZeRO-1 (data):   optimizer master/mu/nu additionally sharded over `data`
+                   on the first divisible dim not already taken by TP.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# name -> spec for the TRAILING dims of the (unstacked) leaf
+_COL = (None, "model")    # output-dim sharded  (d, hidden)
+_ROW = ("model", None)    # input-dim sharded   (hidden, d)
+_PARAM_RULES: dict[str, tuple] = {
+    # embeddings
+    "embed": ("model", None),
+    "unembed": (None, "model"),
+    "pos_embed": (None, None),
+    # attention
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    # norms (replicated)
+    "scale": (None,), "bias": (None,),
+    # dense MLP
+    "w_gate": _COL, "w_up": _COL, "w_down": _ROW,
+    "b_up": ("model",), "b_down": (None,),
+    # MoE (rank-3 expert-stacked leaves handled by rank below)
+    "router": (None, None),
+    # SSM
+    "w_x": _COL, "w_z": _COL, "conv": (None, "model"),
+    "w_b": _ROW, "w_c": _ROW, "w_dt": _ROW,
+    "dt_bias": ("model",), "log_a": ("model", None), "d_skip": ("model",),
+    "w_out": _ROW,
+    # xLSTM
+    "w_q": _COL, "w_k": _COL, "w_v": _COL,
+    "w_i": _COL, "w_f": _COL, "w_o": _COL,
+}
+_MOE_EXPERT_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+        if hasattr(p, "name"):
+            return str(p.name)
+    return ""
+
+
+def _path_has(path, *names) -> bool:
+    keys = {str(getattr(p, "key", getattr(p, "name", ""))) for p in path}
+    return any(n in keys for n in names)
+
+
+def _guard(spec: tuple, shape: tuple, mesh) -> tuple:
+    """Drop axes missing from this mesh or not dividing the dim size."""
+    names = set(mesh.axis_names)
+    out = []
+    for dim, s in enumerate(spec):
+        if s is None:
+            out.append(None)
+            continue
+        if isinstance(s, tuple):
+            s = tuple(a for a in s if a in names)
+            if not s:
+                out.append(None)
+                continue
+            size = int(np.prod([mesh.shape[a] for a in s]))
+        elif s in names:
+            size = mesh.shape[s]
+        else:
+            out.append(None)
+            continue
+        out.append(s if shape[dim] % size == 0 else None)
+    return tuple(out)
+
+
+def param_spec(path, leaf, mesh) -> P:
+    name = _leaf_name(path)
+    shape = np.shape(leaf)
+    rank = len(shape)
+    base = _PARAM_RULES.get(name)
+    if base is None:
+        base = (None,) * rank
+    # MoE expert-stacked leaves: (E_pad, d, f) -> experts over model (EP)
+    if name in _MOE_EXPERT_LEAVES and rank - len(base) >= 1 \
+            and _path_has(path, "moe") and not _path_has(path, "shared"):
+        # the leading stack dims are (layer?, expert); expert gets "model"
+        base = ("model",) + (None,) * (len(base))
+    pad = rank - len(base)
+    spec = (None,) * pad + base
+    return P(*_guard(spec, shape, mesh))
+
+
+def make_param_shardings(mesh, params_tree):
+    def fn(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(fn, params_tree)
+
+
+def zero1_spec(path, leaf, mesh) -> P:
+    """Optimizer-state spec: param TP spec + `data` on the first free
+    divisible dim (ZeRO-1)."""
+    base = tuple(param_spec(path, leaf, mesh))
+    shape = np.shape(leaf)
+    data = mesh.shape.get("data", 1)
+    out = list(base) + [None] * (len(shape) - len(base))
+    for dim, s in enumerate(out):
+        if s is None and shape[dim] % data == 0 and shape[dim] >= data:
+            out[dim] = "data"
+            break
+    return P(*out)
+
+
+def make_opt_state_shardings(mesh, opt_state_tree, params_tree):
+    """AdamWState sharding: step replicated; master/mu/nu/error ZeRO-1."""
+    del params_tree
+    replicated = NamedSharding(mesh, P())
+
+    def fn(path, leaf):
+        # path[0] is the NamedTuple field (attrgetter-style)
+        field = str(getattr(path[0], "name", getattr(path[0], "key", "")))
+        if field == "step":
+            return replicated
+        return NamedSharding(mesh, zero1_spec(path[1:], leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(fn, opt_state_tree)
+
+
+def batch_shardings(mesh, batch_tree):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def fn(path, leaf):
+        shape = np.shape(leaf)
+        spec = (dp,) + (None,) * (len(shape) - 1)
+        return NamedSharding(mesh, P(*_guard(spec, shape, mesh)))
+
+    return jax.tree_util.tree_map_with_path(fn, batch_tree)
+
+
+# cache leaf name -> trailing spec (after the layer-stack dim)
+def cache_spec(path, leaf, mesh) -> P:
+    name = _leaf_name(path)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    shape = np.shape(leaf)
+    rank = len(shape)
+    if name in ("k", "v"):            # (L, B, C, n_kv, hd) ring caches
+        base = (None, dp, "model", None, None)
+    elif name in ("k_scale", "v_scale"):   # (L, B, C, n_kv) int8 scales
+        base = (None, dp, "model", None)
+    elif name in ("enc_k", "enc_v"):  # (L, B, T_enc, n_kv, hd)
+        base = (None, dp, None, None, None)
+    elif name == "h":                 # ssm state (L, B, d_in, N)
+        base = (None, dp, "model", None)
+    elif name == "conv_buf":          # (L, B, W-1, d_in)
+        base = (None, dp, None, "model")
+    elif name == "c" and rank == 5:   # mlstm (L, B, H, dk, dv)
+        base = (None, dp, None, "model", None)
+    elif name == "n" and rank == 4:   # mlstm n (L, B, H, dk)
+        base = (None, dp, None, "model")
+    elif name == "m" and rank == 3:   # mlstm m (L, B, H)
+        base = (None, dp, None)
+    elif rank >= 2:                   # slstm c/n/m (L, B, D) and misc
+        base = (None, dp) + ("model",) * (rank == 3) + (None,) * max(
+            0, rank - 3
+        )
+    else:
+        base = (None,) * rank
+    base = tuple(base)[:rank] + (None,) * max(0, rank - len(base))
+    return P(*_guard(base, shape, mesh))
+
+
+def make_cache_shardings(mesh, cache_tree):
+    def fn(path, leaf):
+        return NamedSharding(mesh, cache_spec(path, leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(fn, cache_tree)

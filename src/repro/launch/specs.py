@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input — no allocation.
+
+``input_specs(arch, shape)`` returns the exact pytree of inputs the jitted
+step expects for that (architecture x input-shape) cell; params/opt-state/
+cache templates come from jax.eval_shape over the init functions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeSpec, get_config
+from repro.models import decode as decode_lib
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+Spec = jax.ShapeDtypeStruct
+
+
+def input_specs(arch_id: str, shape: ShapeSpec) -> dict[str, Any]:
+    """Inputs for the step kind of this cell (train/prefill/decode)."""
+    cfg = get_config(arch_id)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch: dict[str, Any] = {
+            "tokens": Spec((B, S), jnp.int32),
+            "targets": Spec((B, S), jnp.int32),
+        }
+        if cfg.is_encdec:
+            batch["frames"] = Spec(
+                (B, cfg.encoder_len, cfg.d_model), jnp.bfloat16
+            )
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out: dict[str, Any] = {"tokens": Spec((B, S), jnp.int32)}
+        if cfg.is_encdec:
+            out["frames"] = Spec(
+                (B, cfg.encoder_len, cfg.d_model), jnp.bfloat16
+            )
+        return out
+    if shape.kind == "decode":
+        return {
+            "token": Spec((B,), jnp.int32),
+            "pos": Spec((), jnp.int32),
+            "cache": cache_specs(cfg, B, S),
+        }
+    raise ValueError(shape.kind)
+
+
+def params_specs(cfg: ModelConfig, param_dtype=jnp.bfloat16):
+    """Abstract parameter pytree via eval_shape (no allocation)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda k: tfm.init_params(cfg, k, param_dtype), key
+    )
+
+
+def cache_specs(cfg: ModelConfig, batch: int, context: int,
+                dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: decode_lib.init_cache(cfg, batch, context, dtype)
+    )
+
+
+def opt_state_specs(cfg: ModelConfig, param_dtype=jnp.bfloat16):
+    from repro.optim.adamw import adamw_init
+
+    params = params_specs(cfg, param_dtype)
+    return jax.eval_shape(adamw_init, params)

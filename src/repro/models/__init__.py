@@ -1,0 +1,13 @@
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward, init_params, layer_plan
+from repro.models.decode import decode_step, init_cache, prefill
+
+__all__ = [
+    "ModelConfig",
+    "forward",
+    "init_params",
+    "layer_plan",
+    "decode_step",
+    "init_cache",
+    "prefill",
+]

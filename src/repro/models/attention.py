@@ -1,0 +1,451 @@
+"""Grouped-query attention with the assigned archs' variants.
+
+Covers: MHA/GQA/MQA (n_kv_heads), qk-norm (qwen3, chameleon), QKV bias
+(qwen1.5), RoPE / learned positions (whisper), full-causal and
+sliding-window masks (hymba), non-causal encoder and cross attention
+(whisper), and a ring-buffer KV cache for decode.
+
+Sharding: heads/kv-heads carry the "heads"/"kv_heads" logical axes (tensor
+parallel over `model`); batch carries "batch".  Softmax in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+Params = dict
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, nq * hd, dtype),
+        "wk": dense_init(kk, d, nkv * hd, dtype),
+        "wv": dense_init(kv, d, nkv * hd, dtype),
+        "wo": dense_init(ko, nq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype)}
+    del cross  # same parameter shapes; callers pass encoder output as kv_src
+    return p
+
+
+def _project_q(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    return q
+
+
+def _project_kv(p: Params, cfg: ModelConfig, x: jax.Array):
+    B, S, _ = x.shape
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q: (B,Sq,nq,hd) k/v: (B,Sk,nkv,hd) mask: broadcastable (B,1,Sq,Sk).
+
+    GQA is computed by repeating K/V up to the query head count and using a
+    single 4-D einsum: a (nkv, n_rep) 5-D grouping cannot be sharded by a
+    single mesh axis and forces GSPMD into involuntary full remat (observed
+    on qwen3 train_4k: 71 GiB temp).  The repeat is free at trace level for
+    n_rep=1 and otherwise materialises transiently under remat; each device
+    keeps only the kv heads its query-head shard needs when nq divides the
+    model axis.
+    """
+    B, Sq, nq, hd = q.shape
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+        k = shard(k, "batch", None, "heads", None)
+        v = shard(v, "batch", None, "heads", None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores * (1.0 / math.sqrt(hd))
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out
+
+
+import os
+
+FLASH_MIN_SEQ = 4096     # full-materialisation path below this (tests/smoke)
+Q_CHUNK = 512
+KV_CHUNK = 1024
+# §Perf baseline/optimised toggle: REPRO_DISABLE_FLASH=1 restores the
+# full-materialisation attention for A/B dry-runs.
+FLASH_ENABLED = os.environ.get("REPRO_DISABLE_FLASH") != "1"
+
+
+def flash_attend(q, k, v, *, causal: bool = True, window=0,
+                 q_chunk: int = Q_CHUNK, kv_chunk: int = KV_CHUNK,
+                 n_rep: int = 1):
+    """Chunked online-softmax attention (flash-style, pure JAX).
+
+    Replaces the (B, h, S, S) score materialisation with a scan over query
+    chunks; each chunk runs an inner online-softmax scan over KV chunks and
+    is wrapped in jax.checkpoint, so backward recomputes the chunk instead
+    of storing probabilities — memory O(S·chunk) instead of O(S²).
+
+    Sliding-window variant: when `window` is a positive python int, each
+    query chunk slices only its [start - window, end) KV band (static
+    length window + q_chunk), making SWA prefill O(S·window) compute AND
+    memory (hymba's 29 SWA layers at 32k).
+
+    GQA: with n_rep > 1, q has n_kv*n_rep heads while k/v keep n_kv — the
+    grouped einsums never materialise repeated K/V (§Perf: a repeat that
+    cannot shard over the model axis replicates GBs of K/V per layer).
+
+    q: (B, S, Hq, hd); k, v: (B, S, Hq // n_rep, hd).  Positions are
+    implicit (0..S-1): callers with nonstandard position vectors use the
+    reference path.
+    """
+    B, S, Hq, D = q.shape
+    H = Hq // n_rep          # kv heads
+    R = n_rep
+    scale = 1.0 / math.sqrt(D)
+    pad_q = (-S) % q_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    n_q = q.shape[1] // q_chunk
+
+    banded = bool(causal) and isinstance(window, int) and 0 < window < S
+    if banded:
+        band = window + q_chunk                  # static KV slice length
+        pad_left = window
+        k_p = jnp.pad(k, ((0, 0), (pad_left, 0), (0, 0), (0, 0)))
+        v_p = jnp.pad(v, ((0, 0), (pad_left, 0), (0, 0), (0, 0)))
+    else:
+        pad_kv = (-S) % kv_chunk
+        k_p = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v_p = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        n_kv = k_p.shape[1] // kv_chunk
+
+    w_arr = jnp.asarray(window)
+
+    def one_q_chunk(qi, q_c):
+        """q_c: (B, q_chunk, Hq, D); qi: chunk index (traced)."""
+        q_start = qi * q_chunk
+        qpos = q_start + jnp.arange(q_chunk)                 # (q_chunk,)
+        qf = q_c.astype(jnp.float32).reshape(B, q_chunk, H, R, D)
+
+        def inner(carry, kv_idx_or_slice):
+            m, l, o = carry
+            if banded:
+                k_c, v_c, kpos = kv_idx_or_slice
+            else:
+                ki = kv_idx_or_slice
+                k_c = jax.lax.dynamic_slice_in_dim(k_p, ki * kv_chunk,
+                                                   kv_chunk, 1)
+                v_c = jax.lax.dynamic_slice_in_dim(v_p, ki * kv_chunk,
+                                                   kv_chunk, 1)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qf,
+                           k_c.astype(jnp.float32)) * scale
+            mask = jnp.ones((q_chunk, kpos.shape[0]), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+                mask &= (kpos[None, :] > qpos[:, None] - w_arr) | (w_arr <= 0)
+            mask &= (kpos[None, :] >= 0) & (qpos[:, None] < S)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            o = o * corr[..., None] + jnp.einsum(
+                "bhrqk,bkhd->bhrqd", p.astype(v_c.dtype), v_c
+            ).astype(jnp.float32)
+            return (m_new, l, o), None
+
+        m0 = jnp.full((B, H, R, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, R, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, H, R, q_chunk, D), jnp.float32)
+
+        if banded:
+            # static-length KV band [q_start, q_start + band) in the
+            # left-padded array == [q_start - window, q_end) unpadded.
+            k_c = jax.lax.dynamic_slice_in_dim(k_p, q_start, band, 1)
+            v_c = jax.lax.dynamic_slice_in_dim(v_p, q_start, band, 1)
+            kpos = q_start - window + jnp.arange(band)
+            (m, l, o), _ = inner((m0, l0, o0), (k_c, v_c, kpos))
+        else:
+            (m, l, o), _ = jax.lax.scan(
+                inner, (m0, l0, o0), jnp.arange(n_kv)
+            )
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        # (B,H,R,qc,D) -> (B,qc,H*R,D)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, Hq, D)
+        return out.astype(q.dtype)
+
+    one_q_chunk = jax.checkpoint(one_q_chunk, prevent_cse=False)
+
+    def outer(_, qi):
+        q_c = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 1)
+        return None, one_q_chunk(qi, q_c)
+
+    _, chunks = jax.lax.scan(outer, None, jnp.arange(n_q))
+    out = chunks.swapaxes(0, 1).reshape(B, n_q * q_chunk, Hq, D)
+    return out[:, :S]
+
+
+def causal_mask(sq: int, sk: int, window: int = 0, offset: int = 0):
+    """(1, 1, sq, sk) bool; offset = absolute position of query 0."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def attend(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int | jax.Array = 0,
+    causal: bool = True,
+    kv_src: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    B, S, _ = x.shape
+    q = _project_q(p, cfg, x)
+    kv_in = x if kv_src is None else kv_src
+    k, v = _project_kv(p, cfg, kv_in)
+    if not cfg.learned_pos and kv_src is None:
+        q = apply_rope_heads(q, positions, cfg.rope_theta)
+        k = apply_rope_heads(k, positions if kv_positions is None
+                             else kv_positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    use_flash = (FLASH_ENABLED and causal and kv_src is None
+                 and S >= FLASH_MIN_SEQ and isinstance(window, int))
+    if use_flash:
+        # chunked online-softmax path: no (S, S) score materialisation
+        # (§Perf hillclimb: prefill_32k / train_4k memory term).
+        from repro.distributed.sharding import logical_axis_size
+
+        tp = max(logical_axis_size("heads"), 1)
+        if tp > 1:
+            # Megatron-style head padding: repeat K/V to the query head
+            # count and zero-pad heads to a multiple of the TP axis so the
+            # attention einsums shard (deepseek's 56 heads over 16 chips
+            # otherwise replicate the whole attention per device — §Perf).
+            hp = -(-cfg.n_heads // tp) * tp
+            kr = jnp.repeat(k, n_rep, axis=2) if n_rep > 1 else k
+            vr = jnp.repeat(v, n_rep, axis=2) if n_rep > 1 else v
+            if hp != cfg.n_heads:
+                padw = ((0, 0), (0, 0), (0, hp - cfg.n_heads), (0, 0))
+                qp = jnp.pad(q, padw)
+                kr = jnp.pad(kr, padw)
+                vr = jnp.pad(vr, padw)
+            else:
+                qp = q
+            qp = shard(qp, "batch", None, "heads", None)
+            kr = shard(kr, "batch", None, "heads", None)
+            vr = shard(vr, "batch", None, "heads", None)
+            out = flash_attend(qp, kr, vr, causal=True, window=window)
+            out = out[:, :, :cfg.n_heads]
+        else:
+            # no TP (tests / single device): grouped GQA flash, K/V
+            # unrepeated
+            out = flash_attend(q, k, v, causal=True, window=window,
+                               n_rep=n_rep)
+    else:
+        mask = None
+        if causal and kv_src is None:
+            qp = positions[:, :, None]
+            kp = positions[:, None, :]
+            mask = kp <= qp
+            # `window` may be a traced per-layer scalar (0 = global).
+            w = jnp.asarray(window)
+            mask &= (kp > qp - w) | (w <= 0)
+            mask = mask[:, None]
+        out = _sdpa(q, k, v, mask, n_rep)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"].astype(x.dtype)
+    if return_kv:
+        return out, (k, v)   # k already roped — matches decode cache layout
+    return out
+
+
+def apply_rope_heads(x, positions, theta):
+    from repro.models.layers import apply_rope
+
+    return apply_rope(x, positions, theta)
+
+
+def _decode_sdpa(q, k, v, mask, n_rep: int):
+    """Decode-time GQA over a seq-sharded ring cache — NO head repeat.
+
+    Repeating K/V here would 7x the (huge) cache and force a reshard off
+    the "cache_seq" layout (observed: 20 GiB temp on deepseek decode_32k).
+    Instead queries group as (nkv, n_rep) and both einsums contract over
+    the sharded cache axis; the only collectives are the tiny softmax
+    max/sum and output partial-sum reductions.
+    """
+    B, Sq, nq, hd = q.shape                    # Sq == 1
+    nkv = k.shape[2]
+    qg = q[:, 0].reshape(B, nkv, n_rep, hd)
+    scores = jnp.einsum("bhrd,bkhd->bhrk", qg, k).astype(jnp.float32)
+    scores = scores * (1.0 / math.sqrt(hd))
+    scores = shard(scores, "batch", None, None, "cache_seq")
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)   # (1,1,1,C) broadcast
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrk,bkhd->bhrd", probs, v)
+    return out.reshape(B, Sq, nq, hd)
+
+
+# ---------------------------------------------------------------------------
+# decode path (ring-buffer KV cache)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Ring-buffer cache: capacity = full seq (dense) or window (SWA).
+
+    int8 mode (beyond-paper §Perf: halves the decode memory term): k/v are
+    stored as int8 with one f16 scale per (batch, slot, kv_head); dequant
+    happens on read, fused into the attention dot's epilogue on TPU so the
+    HBM traffic is the int8 payload.
+    """
+    k: jax.Array                    # (B, C, n_kv, hd)  bf16 | int8
+    v: jax.Array
+    k_scale: jax.Array | None = None   # (B, C, n_kv) f16, int8 mode only
+    v_scale: jax.Array | None = None
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def quantized(self) -> bool:
+        return self.k.dtype == jnp.int8
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype
+                  ) -> KVCache:
+    shape = (batch, capacity, cfg.n_kv_heads, cfg.head_dim)
+    if dtype == jnp.int8:
+        sshape = shape[:-1]
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(sshape, jnp.float16),
+            v_scale=jnp.zeros(sshape, jnp.float16),
+        )
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, n_kv, hd) -> int8 values + per-(B,S,n_kv) f16 scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def decode_attend(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,            # (B, 1, D) current token
+    pos: jax.Array,          # () int32 absolute position
+    cache: KVCache,
+    *,
+    window: int | jax.Array = 0,
+) -> tuple[jax.Array, KVCache]:
+    """One decode step: append K/V at pos (mod capacity), attend over cache."""
+    B = x.shape[0]
+    q = _project_q(p, cfg, x)                                # (B,1,nq,hd)
+    k_new, v_new = _project_kv(p, cfg, x)                    # (B,1,nkv,hd)
+    if not cfg.learned_pos:
+        pvec = jnp.full((B, 1), pos, jnp.int32)
+        q = apply_rope_heads(q, pvec, cfg.rope_theta)
+        k_new = apply_rope_heads(k_new, pvec, cfg.rope_theta)
+
+    C = cache.capacity
+    slot = (pos % C).astype(jnp.int32)
+    new_cache: KVCache
+    if cache.quantized:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        k_i8 = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
+        v_i8 = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
+        k_sc = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, slot, 0))
+        v_sc = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, slot, 0))
+        k_i8 = shard(k_i8, "batch", "cache_seq", "kv_heads", None)
+        v_i8 = shard(v_i8, "batch", "cache_seq", "kv_heads", None)
+        new_cache = KVCache(k=k_i8, v=v_i8, k_scale=k_sc, v_scale=v_sc)
+        k = _dequantize_kv(k_i8, k_sc, x.dtype)
+        v = _dequantize_kv(v_i8, v_sc, x.dtype)
+    else:
+        k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+        k = shard(k, "batch", "cache_seq", "kv_heads", None)
+        v = shard(v, "batch", "cache_seq", "kv_heads", None)
+        new_cache = KVCache(k=k, v=v)
+
+    # validity: ring slot s holds absolute position p_s; it is attendable iff
+    # p_s <= pos and p_s > pos - C (ring eviction) and (SWA) p_s > pos - w.
+    slots = jnp.arange(C)
+    wraps = (pos // C).astype(jnp.int32)
+    p_s = jnp.where(slots <= slot, wraps * C + slots, (wraps - 1) * C + slots)
+    valid = (p_s >= 0) & (p_s <= pos)
+    w = jnp.asarray(window)
+    valid &= (p_s > pos - w) | (w <= 0)
+    mask = valid[None, None, None, :]                        # (1,1,1,C)
+
+    out = _decode_sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def decode_cross_attend(
+    p: Params, cfg: ModelConfig, x: jax.Array, enc_k: jax.Array,
+    enc_v: jax.Array,
+) -> jax.Array:
+    """Cross-attention during decode: encoder K/V precomputed at prefill."""
+    q = _project_q(p, cfg, x)
+    out = _decode_sdpa(q, enc_k, enc_v, None, cfg.n_heads // cfg.n_kv_heads)
+    B = x.shape[0]
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype)

@@ -1,0 +1,340 @@
+"""Decode path: cache init, prefill, and single-token decode step.
+
+Cache layout mirrors the layer plan (transformer.py): a list with one entry
+per run, each entry a pytree of arrays stacked along the run's layer axis so
+the decode step scans layers exactly like the forward pass.
+
+Cache capacities (DESIGN.md §7 — what makes long_500k legal):
+  dense/moe/whisper self-attn   full context capacity
+  hymba_global                  full context capacity (3 layers only)
+  hymba_swa                     min(window, context)  — ring buffer
+  mamba / xLSTM                 O(1) recurrent state, no growth
+
+Sharding: KV batch over ("pod","data"), kv-heads over "model" when
+divisible; the big hymba_global / dense caches shard their sequence dim
+over "model" otherwise (rules in distributed/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, apply_norm, embed, unembed
+from repro.models.transformer import (
+    _apply_block,
+    encode,
+    layer_plan,
+)
+
+Params = dict
+Cache = list
+
+
+def _kv_capacity(kind: str, cfg: ModelConfig, context: int) -> int:
+    if kind == "hymba_swa":
+        return min(cfg.sliding_window, context)
+    return context
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    context: int,
+    dtype=jnp.bfloat16,
+    *,
+    encoder_len: int | None = None,
+) -> Cache:
+    """Zero cache sized for `context` tokens."""
+    cache: Cache = []
+    for kind, count in layer_plan(cfg):
+        if kind in ("dense", "moe", "hymba_global", "hymba_swa",
+                    "whisper_dec"):
+            cap = _kv_capacity(kind, cfg, context)
+            kv = jax.vmap(
+                lambda _: attn_lib.init_kv_cache(cfg, batch, cap, dtype)
+            )(jnp.arange(count))
+            entry: Any = {"kv": kv}
+            if kind in ("hymba_global", "hymba_swa"):
+                d_in = cfg.n_heads * cfg.head_dim
+                entry["ssm"] = jax.vmap(
+                    lambda _: ssm_lib.init_ssm_state(cfg, batch, d_in, dtype)
+                )(jnp.arange(count))
+            if kind == "whisper_dec":
+                el = encoder_len or cfg.encoder_len
+                shape = (count, batch, el, cfg.n_kv_heads, cfg.head_dim)
+                entry["enc_k"] = jnp.zeros(shape, dtype)
+                entry["enc_v"] = jnp.zeros(shape, dtype)
+            cache.append(entry)
+        elif kind == "mlstm":
+            cache.append(
+                {"state": jax.vmap(
+                    lambda _: xlstm_lib.init_mlstm_state(cfg, batch)
+                )(jnp.arange(count))}
+            )
+        elif kind == "slstm":
+            cache.append(
+                {"state": jax.vmap(
+                    lambda _: xlstm_lib.init_slstm_state(cfg, batch)
+                )(jnp.arange(count))}
+            )
+        else:
+            raise ValueError(kind)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _ring_fill(kv_full: jax.Array, cap: int) -> jax.Array:
+    """Place the last min(S, cap) positions at ring slots pos % cap.
+
+    kv_full: (B, S, n_kv, hd) -> (B, cap, n_kv, hd).
+    """
+    B, S, n_kv, hd = kv_full.shape
+    if S <= cap:
+        out = jnp.pad(kv_full, ((0, 0), (0, cap - S), (0, 0), (0, 0)))
+    else:
+        tail = kv_full[:, S - cap:]                    # (B, cap, n_kv, hd)
+        slots = (jnp.arange(S - cap, S)) % cap
+        out = jnp.zeros((B, cap, n_kv, hd), kv_full.dtype).at[:, slots].set(
+            tail)
+    # land directly in the decode-cache layout (seq over `model`)
+    return shard(out, "batch", "cache_seq", None, None)
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                 # (B, S)
+    context: int,
+    *,
+    encoder_frames: jax.Array | None = None,
+    compute_dtype=jnp.bfloat16,
+    capacity_mode: str = "fifo",
+    moe_groups: int = 1,
+    kv_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Cache]:
+    """Process the prompt; returns (last-position logits (B, V) f32, cache).
+
+    Only the final position's logits are computed (the (B, S, V) tensor is
+    never materialised — prefill feeds the decode loop, not the loss).
+    """
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, compute_dtype)
+    if cfg.learned_pos:
+        x = x + params["pos_embed"].astype(compute_dtype)[None, :S]
+    x = shard(x, "batch", "seq_sp", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    encoder_out = None
+    if cfg.is_encdec:
+        assert encoder_frames is not None
+        encoder_out = encode(cfg, params, encoder_frames.astype(compute_dtype))
+
+    cache: Cache = []
+    for run_params, (kind, count) in zip(params["runs"], layer_plan(cfg)):
+        x, entry = _prefill_run(
+            kind, cfg, run_params, x, positions, context,
+            encoder_out=encoder_out, capacity_mode=capacity_mode,
+            moe_groups=moe_groups, kv_dtype=kv_dtype,
+        )
+        cache.append(entry)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1]
+    table = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, last, cfg.vocab)
+    return shard(logits, "batch", "vocab"), cache
+
+
+def _make_kv_entry(k, v, cap, kv_dtype):
+    """Ring-fill + optional int8 quantisation (beyond-paper §Perf)."""
+    kf = _ring_fill(k, cap)
+    vf = _ring_fill(v, cap)
+    if kv_dtype == jnp.int8:
+        kq, ks = attn_lib._quantize_kv(kf)
+        vq, vs = attn_lib._quantize_kv(vf)
+        return KVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+    return KVCache(k=kf, v=vf)
+
+
+def _prefill_block(kind, cfg, p, x, positions, cap, *, encoder_out,
+                   capacity_mode, moe_groups=1, kv_dtype=jnp.bfloat16):
+    """One block forward that also emits its decode-cache entry."""
+    eps = cfg.norm_eps
+    if kind in ("dense", "moe"):
+        h = apply_norm(cfg.norm, p["ln1"], x, eps)
+        a, (k, v) = attn_lib.attend(p["attn"], cfg, h, positions,
+                                    return_kv=True)
+        x = x + a
+        h = apply_norm(cfg.norm, p["ln2"], x, eps)
+        if kind == "dense":
+            x = x + apply_mlp(cfg.act, p["mlp"], h)
+        else:
+            out, _ = moe_lib.moe_apply(p["moe"], cfg, h,
+                                       capacity_mode=capacity_mode,
+                                       n_groups=moe_groups)
+            x = x + out
+        entry = {"kv": _make_kv_entry(k, v, cap, kv_dtype)}
+        return x, entry
+    if kind in ("hymba_global", "hymba_swa"):
+        w = 0 if kind == "hymba_global" else cfg.sliding_window
+        h = apply_norm(cfg.norm, p["ln1"], x, eps)
+        a, (k, v) = attn_lib.attend(p["attn"], cfg, h, positions, window=w,
+                                    return_kv=True)
+        s, ssm_state = ssm_lib.ssm_apply(p["ssm"], cfg, h, return_state=True)
+        a = apply_norm(cfg.norm, p["attn_norm"], a, eps)
+        s = apply_norm(cfg.norm, p["ssm_norm"], s, eps)
+        x = x + 0.5 * (a + s)
+        h = apply_norm(cfg.norm, p["ln2"], x, eps)
+        x = x + apply_mlp(cfg.act, p["mlp"], h)
+        entry = {
+            "kv": _make_kv_entry(k, v, cap, kv_dtype),
+            "ssm": ssm_state,
+        }
+        return x, entry
+    if kind == "mlstm":
+        h = apply_norm(cfg.norm, p["ln"], x, eps)
+        out, state = xlstm_lib.mlstm_apply(p["mlstm"], cfg, h,
+                                           return_state=True)
+        return x + out, {"state": state}
+    if kind == "slstm":
+        h = apply_norm(cfg.norm, p["ln"], x, eps)
+        out, state = xlstm_lib.slstm_apply(p["slstm"], cfg, h,
+                                           return_state=True)
+        return x + out, {"state": state}
+    if kind == "whisper_dec":
+        h = apply_norm(cfg.norm, p["ln1"], x, eps)
+        a, (k, v) = attn_lib.attend(p["attn"], cfg, h, positions,
+                                    return_kv=True)
+        x = x + a
+        h = apply_norm(cfg.norm, p["ln2"], x, eps)
+        xa, (ek, ev) = attn_lib.attend(
+            p["xattn"], cfg, h, positions, causal=False, kv_src=encoder_out,
+            return_kv=True,
+        )
+        x = x + xa
+        h = apply_norm(cfg.norm, p["ln3"], x, eps)
+        x = x + apply_mlp(cfg.act, p["mlp"], h)
+        entry = {
+            "kv": _make_kv_entry(k, v, cap, kv_dtype),
+            "enc_k": ek, "enc_v": ev,
+        }
+        return x, entry
+    raise ValueError(kind)
+
+
+def _prefill_run(kind, cfg, run_params, x, positions, context, *,
+                 encoder_out, capacity_mode, moe_groups=1,
+                 kv_dtype=jnp.bfloat16):
+    cap = _kv_capacity(kind, cfg, context)
+
+    def body(x, p_l):
+        x, entry = _prefill_block(
+            kind, cfg, p_l, x, positions, cap,
+            encoder_out=encoder_out, capacity_mode=capacity_mode,
+            moe_groups=moe_groups, kv_dtype=kv_dtype,
+        )
+        return x, entry
+
+    x, entries = jax.lax.scan(body, x, run_params)
+    return x, entries
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def _step_block(kind, cfg, p, x, pos, entry, *, capacity_mode):
+    """One block for one token.  x: (B, 1, D)."""
+    eps = cfg.norm_eps
+    if kind in ("dense", "moe"):
+        h = apply_norm(cfg.norm, p["ln1"], x, eps)
+        a, kv = attn_lib.decode_attend(p["attn"], cfg, h, pos, entry["kv"])
+        x = x + a
+        h = apply_norm(cfg.norm, p["ln2"], x, eps)
+        if kind == "dense":
+            x = x + apply_mlp(cfg.act, p["mlp"], h)
+        else:
+            out, _ = moe_lib.moe_apply(p["moe"], cfg, h,
+                                       capacity_mode=capacity_mode)
+            x = x + out
+        return x, {"kv": kv}
+    if kind in ("hymba_global", "hymba_swa"):
+        w = 0 if kind == "hymba_global" else cfg.sliding_window
+        h = apply_norm(cfg.norm, p["ln1"], x, eps)
+        a, kv = attn_lib.decode_attend(p["attn"], cfg, h, pos, entry["kv"],
+                                       window=w)
+        s, ssm_state = ssm_lib.ssm_step(p["ssm"], cfg, h, entry["ssm"])
+        a = apply_norm(cfg.norm, p["attn_norm"], a, eps)
+        s = apply_norm(cfg.norm, p["ssm_norm"], s, eps)
+        x = x + 0.5 * (a + s)
+        h = apply_norm(cfg.norm, p["ln2"], x, eps)
+        x = x + apply_mlp(cfg.act, p["mlp"], h)
+        return x, {"kv": kv, "ssm": ssm_state}
+    if kind == "mlstm":
+        h = apply_norm(cfg.norm, p["ln"], x, eps)
+        out, state = xlstm_lib.mlstm_step(p["mlstm"], cfg, h, entry["state"])
+        return x + out, {"state": state}
+    if kind == "slstm":
+        h = apply_norm(cfg.norm, p["ln"], x, eps)
+        out, state = xlstm_lib.slstm_step(p["slstm"], cfg, h, entry["state"])
+        return x + out, {"state": state}
+    if kind == "whisper_dec":
+        h = apply_norm(cfg.norm, p["ln1"], x, eps)
+        a, kv = attn_lib.decode_attend(p["attn"], cfg, h, pos, entry["kv"])
+        x = x + a
+        h = apply_norm(cfg.norm, p["ln2"], x, eps)
+        x = x + attn_lib.decode_cross_attend(
+            p["xattn"], cfg, h, entry["enc_k"], entry["enc_v"]
+        )
+        h = apply_norm(cfg.norm, p["ln3"], x, eps)
+        x = x + apply_mlp(cfg.act, p["mlp"], h)
+        return x, {"kv": kv, "enc_k": entry["enc_k"], "enc_v": entry["enc_v"]}
+    raise ValueError(kind)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,                  # (B,) int32 current token
+    pos: jax.Array,                    # () int32 its absolute position
+    cache: Cache,
+    *,
+    compute_dtype=jnp.bfloat16,
+    capacity_mode: str = "fifo",
+) -> tuple[jax.Array, Cache]:
+    """One decode step: returns (logits (B, V) f32, updated cache)."""
+    B = token.shape[0]
+    x = embed(params["embed"], token[:, None], compute_dtype)  # (B, 1, D)
+    if cfg.learned_pos:
+        x = x + params["pos_embed"].astype(compute_dtype)[None, pos][:, None]
+
+    new_cache: Cache = []
+    for run_params, entry, (kind, _) in zip(
+        params["runs"], cache, layer_plan(cfg)
+    ):
+        def body(x, inp):
+            p_l, entry_l = inp
+            x, new_entry = _step_block(
+                kind, cfg, p_l, x, pos, entry_l, capacity_mode=capacity_mode
+            )
+            return x, new_entry
+
+        x, new_entry = jax.lax.scan(body, x, (run_params, entry))
+        new_cache.append(new_entry)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, x[:, 0], cfg.vocab)
+    return shard(logits, "batch", "vocab"), new_cache

@@ -1,0 +1,157 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings (pure-functional JAX).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init_* returns params,
+    apply is a pure function of (params, inputs).
+  * compute dtype bf16 (TPU MXU native), params kept in `param_dtype`,
+    norm/softmax accumulation in f32.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+DEFAULT_INIT_SCALE = 0.02
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = DEFAULT_INIT_SCALE if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_norm(kind: str, d: int, dtype) -> Params:
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+def apply_norm(kind: str, params: Params, x: jax.Array, eps: float) -> jax.Array:
+    return rmsnorm(params, x, eps) if kind == "rmsnorm" else layernorm(params, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)                  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d: int, d_ff: int, dtype) -> Params:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(kg, d, d_ff, dtype),
+        "w_up": dense_init(ku, d, d_ff, dtype),
+        "w_down": dense_init(kd, d_ff, d, dtype),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    from repro.distributed.sharding import shard
+
+    gate = x @ params["w_gate"].astype(x.dtype)
+    up = x @ params["w_up"].astype(x.dtype)
+    h = jax.nn.silu(gate) * up
+    if h.ndim == 3:
+        h = shard(h, "batch", None, "ffn")   # TP: MLP hidden over `model`
+    return h @ params["w_down"].astype(x.dtype)
+
+
+def init_gelu_mlp(key, d: int, d_ff: int, dtype) -> Params:
+    ku, kd = jax.random.split(key)
+    return {
+        "w_up": dense_init(ku, d, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(kd, d_ff, d, dtype),
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype)
+                    + params["b_up"].astype(x.dtype))
+    return h @ params["w_down"].astype(x.dtype) + params["b_down"].astype(x.dtype)
+
+
+def init_mlp(act: str, key, d: int, d_ff: int, dtype) -> Params:
+    return (init_swiglu(key, d, d_ff, dtype) if act == "swiglu"
+            else init_gelu_mlp(key, d, d_ff, dtype))
+
+
+def apply_mlp(act: str, params: Params, x: jax.Array) -> jax.Array:
+    return swiglu(params, x) if act == "swiglu" else gelu_mlp(params, x)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype) -> jax.Array:
+    return dense_init(key, vocab, d, dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return table.astype(compute_dtype)[tokens]
+
+
+NEG_INF = -1e30
+
+
+def unembed(table: jax.Array, x: jax.Array, real_vocab: int | None = None
+            ) -> jax.Array:
+    """Final projection to vocab logits in f32 (loss numerics).
+
+    When the table is lane-padded past `real_vocab`, the phantom columns
+    are masked to NEG_INF so softmax/logsumexp/top-k never see them.
+    """
+    logits = (x @ table.astype(x.dtype)).astype(jnp.float32)
+    v = logits.shape[-1]
+    if real_vocab is not None and real_vocab < v:
+        mask = jnp.arange(v) < real_vocab
+        logits = jnp.where(mask, logits, NEG_INF)
+    return logits

@@ -1,0 +1,162 @@
+"""Selective SSM (Mamba-style) mixer — hymba's parallel-head partner.
+
+Discretised selective state space:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D_skip * x_t
+with input-dependent (selective) B_t, C_t, dt_t.
+
+TPU adaptation: the recurrence is evaluated with a CHUNKED parallel scan —
+within a chunk the linear recurrence composes via an associative scan over
+(decay, increment) pairs (VMEM-sized working set, MXU-friendly batched
+einsums); across chunks a cheap sequential lax.scan carries the (d_in, N)
+state.  Memory per chunk is B·chunk·d_in·N instead of B·S·d_in·N, which is
+what makes train_4k/prefill_32k activations fit (DESIGN.md §5).
+
+Decode is the O(1) recurrent step on the carried state (this is what makes
+hymba long_500k legal — no KV growth from the SSM path).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Params = dict
+CHUNK = 128
+
+
+def init_ssm(key, cfg: ModelConfig, dtype, d_in: int | None = None) -> Params:
+    d = cfg.d_model
+    d_in = d_in or cfg.n_heads * cfg.head_dim
+    n = cfg.ssm_state
+    kx, kz, kb, kc, kdt, ko, kconv = jax.random.split(key, 7)
+    # S4D-real initialisation for A (negative reals)
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (d_in, 1))
+    return {
+        "w_x": dense_init(kx, d, d_in, dtype),
+        "w_z": dense_init(kz, d, d_in, dtype),
+        "conv": (jax.random.normal(kconv, (cfg.ssm_conv, d_in), jnp.float32)
+                 * 0.02).astype(dtype),
+        "w_b": dense_init(kb, d_in, n, dtype),
+        "w_c": dense_init(kc, d_in, n, dtype),
+        "w_dt": dense_init(kdt, d_in, 1, dtype),
+        "dt_bias": jnp.zeros((d_in,), dtype),
+        "log_a": jnp.log(a_init).astype(dtype),
+        "d_skip": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ko, d_in, d, dtype),
+    }
+
+
+class SSMState(NamedTuple):
+    h: jax.Array           # (B, d_in, N) recurrent state
+    conv_buf: jax.Array    # (B, ssm_conv - 1, d_in) causal conv tail
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, d_in: int, dtype) -> SSMState:
+    return SSMState(
+        h=jnp.zeros((batch, d_in, cfg.ssm_state), jnp.float32),
+        conv_buf=jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype),
+    )
+
+
+def _causal_conv(p: Params, xs: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv along time.  xs: (B, S, d_in)."""
+    w = p["conv"].astype(xs.dtype)                    # (W, d_in)
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xs.shape[0], W - 1, xs.shape[2]), xs.dtype)
+    xp = jnp.concatenate([tail, xs], axis=1)          # (B, S+W-1, d_in)
+    out = sum(xp[:, i : i + xs.shape[1]] * w[i] for i in range(W))
+    new_tail = xp[:, -(W - 1):] if W > 1 else tail
+    return out, new_tail
+
+
+def _selective_terms(p: Params, xc: jax.Array):
+    """Per-step decay a_t (B,S,d_in,N) and increment b_t (B,S,d_in,N)."""
+    bsel = xc @ p["w_b"].astype(xc.dtype)             # (B, S, N)
+    csel = xc @ p["w_c"].astype(xc.dtype)             # (B, S, N)
+    dt = jax.nn.softplus(
+        (xc @ p["w_dt"].astype(xc.dtype)) + p["dt_bias"].astype(xc.dtype)
+    ).astype(jnp.float32)                             # (B, S, d_in)
+    a = -jnp.exp(p["log_a"].astype(jnp.float32))      # (d_in, N)
+    decay = jnp.exp(dt[..., None] * a)                # (B, S, d_in, N)
+    incr = (dt * xc.astype(jnp.float32))[..., None] * bsel.astype(jnp.float32)[:, :, None, :]
+    return decay, incr, csel
+
+
+def ssm_apply(p: Params, cfg: ModelConfig, x: jax.Array,
+              return_state: bool = False):
+    """Full-sequence (train/prefill) selective SSM.  x: (B, S, D)."""
+    B, S, D = x.shape
+    xin = x @ p["w_x"].astype(x.dtype)                # (B, S, d_in)
+    z = x @ p["w_z"].astype(x.dtype)
+    xc, conv_tail = _causal_conv(p, xin, None)
+    xc = jax.nn.silu(xc)
+
+    pad = (-S) % CHUNK
+    if pad:
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p = xc
+    n_chunks = xc_p.shape[1] // CHUNK
+    d_in = xc_p.shape[2]
+
+    # Selective terms are computed INSIDE the chunk scan: materialising the
+    # full (B, S, d_in, N) decay/increment tensors costs S/CHUNK times the
+    # working set (observed: 409 GiB temp on hymba prefill_32k — §Perf).
+    def chunked(t):
+        return t.reshape(B, n_chunks, CHUNK, *t.shape[2:]).swapaxes(0, 1)
+
+    xc_chunks = chunked(xc_p)                          # (nC, B, CHUNK, d_in)
+    valid_chunks = chunked(
+        (jnp.arange(xc_p.shape[1]) < S)[None, :, None] &
+        jnp.ones((B, 1, 1), bool)
+    )
+
+    def scan_chunk(h0, inputs):
+        xc_c, valid = inputs                           # (B, CHUNK, d_in)
+        dec, inc, cs = _selective_terms(p, xc_c)
+        # padded steps must be identity transitions (decay 1, increment 0)
+        # or the carried-out state would keep decaying past position S.
+        dec = jnp.where(valid[..., None], dec, 1.0)
+        inc = jnp.where(valid[..., None], inc, 0.0)
+
+        # associative scan within chunk: (a, b) o (a', b') = (a a', a' b + b')
+        def combine(l, r):
+            return l[0] * r[0], l[1] * r[0] + r[1]
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (dec, inc), axis=1)
+        h = a_cum * h0[:, None] + b_cum                # (B, CHUNK, d_in, N)
+        y = jnp.einsum("bsdn,bsn->bsd", h, cs.astype(jnp.float32))
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, d_in, cfg.ssm_state), jnp.float32)
+    h_last, ys = jax.lax.scan(scan_chunk, h0, (xc_chunks, valid_chunks))
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * CHUNK, d_in)[:, :S]
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(x.dtype)
+    if return_state:
+        return out, SSMState(h=h_last, conv_buf=conv_tail)
+    return out
+
+
+def ssm_step(
+    p: Params, cfg: ModelConfig, x: jax.Array, state: SSMState
+) -> tuple[jax.Array, SSMState]:
+    """One decode step.  x: (B, 1, D) -> (B, 1, D), O(1) state update."""
+    B = x.shape[0]
+    xin = x @ p["w_x"].astype(x.dtype)                # (B, 1, d_in)
+    z = x @ p["w_z"].astype(x.dtype)
+    xc, new_tail = _causal_conv(p, xin, state.conv_buf)
+    xc = jax.nn.silu(xc)
+    decay, incr, csel = _selective_terms(p, xc)       # (B, 1, d_in, N)
+    h = state.h * decay[:, 0] + incr[:, 0]            # (B, d_in, N)
+    y = jnp.einsum("bdn,bn->bd", h, csel[:, 0].astype(jnp.float32))[:, None]
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"].astype(x.dtype), SSMState(h=h, conv_buf=new_tail)

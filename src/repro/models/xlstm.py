@@ -1,0 +1,307 @@
+"""xLSTM blocks (sLSTM + mLSTM) for the xlstm-1.3b architecture.
+
+Layout follows the xLSTM paper's 7:1 residual stack: one sLSTM block per
+`slstm_every` mLSTM blocks (xlstm-1.3b: 48 blocks, every 8th is sLSTM).
+d_ff = 0 in the assigned config: there is no separate FFN — the up/down
+projection lives inside the mixer (projection factor 2), as in the paper.
+
+mLSTM — matrix memory with exponential gating:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (B, H, dk, dv)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = o_t * (C_t^T q_t) / max(|n_t . q_t|, 1)
+with the log-space stabiliser m_t = max(log f_t + m_{t-1}, log i_t).
+Chunked evaluation: sequential lax.scan over CHUNK-sized blocks, parallel
+(vectorised) within a chunk via cumulative gate products — the TPU-native
+middle ground between a pure recurrence (serial, slow) and a full parallel
+form (O(S^2) memory).
+
+sLSTM — scalar memory per channel, strictly sequential recurrence (the
+paper's point: it is NOT parallelisable), so a lax.scan over time.  Its
+rarity in the 7:1 stack keeps the serial fraction small.
+
+Decode is an O(1) state update for both (long_500k legal: no KV growth).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Params = dict
+CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim  # 4 heads x 512 for xlstm-1.3b
+    d_in = h * hd
+    kq, kk, kv, ki, kf, ko, kup, kdn = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(kup, d, 2 * d_in, dtype),   # x -> (x_m, z gate)
+        "w_q": dense_init(kq, d_in, d_in, dtype),
+        "w_k": dense_init(kk, d_in, d_in, dtype),
+        "w_v": dense_init(kv, d_in, d_in, dtype),
+        "w_i": dense_init(ki, d_in, h, dtype),
+        "w_f": dense_init(kf, d_in, h, dtype),
+        "w_o": dense_init(ko, d_in, d_in, dtype),
+        "w_down": dense_init(kdn, d_in, d, dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, dk, dv)
+    n: jax.Array   # (B, H, dk)
+    m: jax.Array   # (B, H) log-space stabiliser
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    h, hd = cfg.n_heads, cfg.head_dim
+    return MLSTMState(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_gates(p: Params, xm: jax.Array, H: int):
+    """q,k,v: (B,S,H,hd); log i/f gates: (B,S,H) f32."""
+    B, S, d_in = xm.shape
+    hd = d_in // H
+    q = (xm @ p["w_q"].astype(xm.dtype)).reshape(B, S, H, hd)
+    k = (xm @ p["w_k"].astype(xm.dtype)).reshape(B, S, H, hd) / jnp.sqrt(
+        jnp.float32(hd)
+    ).astype(xm.dtype)
+    v = (xm @ p["w_v"].astype(xm.dtype)).reshape(B, S, H, hd)
+    log_i = (xm @ p["w_i"].astype(xm.dtype)).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (xm @ p["w_f"].astype(xm.dtype)).astype(jnp.float32)
+    )
+    o = jax.nn.sigmoid(xm @ p["w_o"].astype(xm.dtype)).reshape(B, S, H, hd)
+    return q, k, v, log_i, log_f, o
+
+
+def _mlstm_chunk(carry: MLSTMState, inp):
+    """Process one chunk: intra-chunk parallel form + state carry-in.
+
+    h_t = o_t * ( sum_{s<=t} w_{t,s} v_s (k_s . q_t) + w0_t (C0^T q_t) ) / denom
+    with w_{t,s} = exp(logF_t - logF_s + logi_s - m_t), w0_t = exp(logF_t + m0 - m_t),
+    logF_t = cumulative log forget within the chunk.
+    """
+    q, k, v, log_i, log_f, o = inp      # (B, C, H, ...) chunk-major
+    c0, n0, m0 = carry
+    B, C, H, hd = q.shape
+    logF = jnp.cumsum(log_f, axis=1)                      # (B, C, H)
+    # stabiliser per position: max over {logF_t + m0, max_{s<=t}(logF_t - logF_s + logi_s)}
+    a_s = log_i - logF                                    # (B,C,H) "source" term
+    run_max = jax.lax.cummax(a_s, axis=1)
+    m_t = jnp.maximum(logF + m0[:, None], logF + run_max)  # (B, C, H)
+
+    w0 = jnp.exp(logF + m0[:, None] - m_t)                # carry-in weight
+    src = jnp.exp(a_s[:, None, :, :] + (logF - m_t)[:, :, None, :])  # (B,t,s,H)
+    tril = jnp.tril(jnp.ones((C, C), bool))
+    src = jnp.where(tril[None, :, :, None], src, 0.0)
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf)        # (B,t,s,H)
+    num_intra = jnp.einsum("btsh,btsh,bshd->bthd", scores, src, vf)
+    num_carry = w0[..., None] * jnp.einsum("bhkd,bthk->bthd", c0, qf)
+    # denominator uses n_t . q_t with n_t = sum_s w_{t,s} k_s + w0 n0
+    den_n = jnp.einsum("bshd,btsh->bthd", kf, src)
+    den_carry = w0[..., None] * n0[:, None]
+    n_t = den_n + den_carry                               # (B,t,H,hd)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, qf)), jnp.exp(-m_t)
+    )
+    h = (num_intra + num_carry) / denom[..., None]
+    h = (o.astype(jnp.float32) * h)
+
+    # chunk-final state (stabilised by m_T = m at the chunk's last step)
+    m_T = m_t[:, -1]
+    wi = jnp.exp(log_i + logF[:, -1:] - logF - m_T[:, None])   # (B,C,H)
+    c_T = jnp.exp(logF[:, -1] + m0 - m_T)[..., None, None] * c0 + jnp.einsum(
+        "bsh,bshk,bshd->bhkd", wi, kf, vf
+    )
+    n_T = jnp.exp(logF[:, -1] + m0 - m_T)[..., None] * n0 + jnp.einsum(
+        "bsh,bshk->bhk", wi, kf
+    )
+    return MLSTMState(c=c_T, n=n_T, m=m_T), h.astype(q.dtype)
+
+
+def mlstm_apply(p: Params, cfg: ModelConfig, x: jax.Array,
+                return_state: bool = False):
+    """Full-sequence mLSTM block.  x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    up = x @ p["w_up"].astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    pad = (-S) % CHUNK
+    xm_p = jnp.pad(xm, ((0, 0), (0, pad), (0, 0))) if pad else xm
+    q, k, v, log_i, log_f, o = _mlstm_gates(p, xm_p, H)
+    if pad:
+        # padded steps: identity transition (f=1, i=0) to keep state exact.
+        valid = (jnp.arange(xm_p.shape[1]) < S)[None, :, None]
+        log_f = jnp.where(valid, log_f, 0.0)
+        log_i = jnp.where(valid, log_i, -1e30)
+    nC = xm_p.shape[1] // CHUNK
+
+    def to_chunks(t):
+        return t.reshape(B, nC, CHUNK, *t.shape[2:]).swapaxes(0, 1)
+
+    inputs = tuple(map(to_chunks, (q, k, v, log_i, log_f, o)))
+    state0 = init_mlstm_state(cfg, B)
+    state_f, hs = jax.lax.scan(_mlstm_chunk, state0, inputs)
+    h = hs.swapaxes(0, 1).reshape(B, nC * CHUNK, H * cfg.head_dim)[:, :S]
+    h = h * jax.nn.silu(z)
+    out = h @ p["w_down"].astype(x.dtype)
+    if return_state:
+        return out, state_f
+    return out
+
+
+def mlstm_step(
+    p: Params, cfg: ModelConfig, x: jax.Array, state: MLSTMState
+) -> tuple[jax.Array, MLSTMState]:
+    """One decode step (O(1) state update)."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    up = x @ p["w_up"].astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_i, log_f, o = _mlstm_gates(p, xm, H)
+    q, k, v, o = (t[:, 0] for t in (q, k, v, o))          # (B,H,hd)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]               # (B,H)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    fw = jnp.exp(log_f + state.m - m_new)
+    iw = jnp.exp(log_i - m_new)
+    kf32, vf32, qf32 = (t.astype(jnp.float32) for t in (k, v, q))
+    c = fw[..., None, None] * state.c + iw[..., None, None] * (
+        kf32[..., :, None] * vf32[..., None, :]
+    )
+    n = fw[..., None] * state.n + iw[..., None] * kf32
+    num = jnp.einsum("bhkd,bhk->bhd", c, qf32)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf32)),
+                      jnp.exp(-m_new))
+    h = (o.astype(jnp.float32) * num / den[..., None]).astype(x.dtype)
+    h = h.reshape(B, 1, H * hd) * jax.nn.silu(z)
+    return h @ p["w_down"].astype(x.dtype), MLSTMState(c=c, n=n, m=m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    kz, ki, kf, ko, kup, kdn = jax.random.split(key, 6)
+    return {
+        "w_up": dense_init(kup, d, 2 * d, dtype),
+        "w_z": dense_init(kz, d, d, dtype),
+        "w_i": dense_init(ki, d, d, dtype),
+        "w_f": dense_init(kf, d, d, dtype),
+        "w_o": dense_init(ko, d, d, dtype),
+        "w_down": dense_init(kdn, d, d, dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, D)
+    n: jax.Array   # (B, D)
+    m: jax.Array   # (B, D)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    return SLSTMState(
+        c=jnp.zeros((batch, d), jnp.float32),
+        n=jnp.zeros((batch, d), jnp.float32),
+        m=jnp.full((batch, d), -1e30, jnp.float32),
+    )
+
+
+def _slstm_gates(p, xm):
+    """Pre-activations for the whole sequence — the projections depend only
+    on the INPUT, so they are hoisted out of the recurrence into four big
+    MXU matmuls (§Perf: the scan itself becomes purely elementwise; the
+    naive per-step formulation re-read the (D, D) weights 4096 times)."""
+    z = jnp.tanh((xm @ p["w_z"].astype(xm.dtype)).astype(jnp.float32))
+    log_i = (xm @ p["w_i"].astype(xm.dtype)).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (xm @ p["w_f"].astype(xm.dtype)).astype(jnp.float32)
+    )
+    o = jax.nn.sigmoid((xm @ p["w_o"].astype(xm.dtype)).astype(jnp.float32))
+    return z, log_i, log_f, o
+
+
+def _slstm_recurrence(z, log_i, log_f, o, state: SLSTMState):
+    """One elementwise recurrence step on precomputed gates."""
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    fw = jnp.exp(log_f + state.m - m_new)
+    iw = jnp.exp(log_i - m_new)
+    c = fw * state.c + iw * z
+    n = jnp.maximum(fw * state.n + iw, jnp.exp(-m_new))
+    h = o * c / n
+    return h, SLSTMState(c=c, n=n, m=m_new)
+
+
+def _slstm_cell(p, xm, state: SLSTMState):
+    """xm: (B, D) one timestep (decode path)."""
+    z, log_i, log_f, o = _slstm_gates(p, xm)
+    return _slstm_recurrence(z, log_i, log_f, o, state)
+
+
+def slstm_apply(p: Params, cfg: ModelConfig, x: jax.Array,
+                return_state: bool = False):
+    """Full-sequence sLSTM: gates batched up front, elementwise lax.scan
+    over time (the serial part the paper's speculation cannot remove).
+
+    REPRO_SLSTM_NAIVE=1 keeps the projections inside the recurrence
+    (per-step (B,D)@(D,D) matmuls) — the §Perf A/B baseline."""
+    import os
+
+    up = x @ p["w_up"].astype(x.dtype)
+    xm, zg = jnp.split(up, 2, axis=-1)
+    state0 = init_slstm_state(cfg, x.shape[0])
+    if os.environ.get("REPRO_SLSTM_NAIVE") == "1":
+        def step_naive(state, xt):
+            h, state = _slstm_cell(p, xt, state)
+            return state, h
+
+        state_f, hs = jax.lax.scan(step_naive, state0, xm.swapaxes(0, 1))
+        h = hs.swapaxes(0, 1).astype(x.dtype) * jax.nn.silu(zg)
+        out = h @ p["w_down"].astype(x.dtype)
+        return (out, state_f) if return_state else out
+    z, log_i, log_f, o = _slstm_gates(p, xm)      # (B, S, D) each
+    # NOTE (§Perf, refuted hypothesis): storing these gates bf16 across the
+    # scan was predicted to halve the AD-saved footprint; measured bytes
+    # went UP 18% (extra converts) with no temp change — reverted.
+
+    def step(state, gates_t):
+        h, state = _slstm_recurrence(*gates_t, state)
+        return state, h
+
+    gates = tuple(t.swapaxes(0, 1) for t in (z, log_i, log_f, o))
+    state_f, hs = jax.lax.scan(step, state0, gates)
+    h = hs.swapaxes(0, 1).astype(x.dtype) * jax.nn.silu(zg)
+    out = h @ p["w_down"].astype(x.dtype)
+    if return_state:
+        return out, state_f
+    return out
+
+
+def slstm_step(
+    p: Params, cfg: ModelConfig, x: jax.Array, state: SLSTMState
+) -> tuple[jax.Array, SLSTMState]:
+    up = x @ p["w_up"].astype(x.dtype)
+    xm, zg = jnp.split(up, 2, axis=-1)
+    h, state = _slstm_cell(p, xm[:, 0], state)
+    h = h[:, None].astype(x.dtype) * jax.nn.silu(zg)
+    return h @ p["w_down"].astype(x.dtype), state

@@ -1,0 +1,101 @@
+"""AdamW with fp32 master weights — ZeRO-1-ready.
+
+The optimizer state (master params + first/second moments, all fp32) is a
+pytree mirroring the model params; at scale the launcher shards it over the
+`data` mesh axis (ZeRO-1) via the state-sharding rules in launch/dryrun.py,
+while the bf16 compute params stay TP-sharded over `model`.  The update
+math is purely elementwise, so sharding the state along ANY axis is valid.
+
+Optional int8 error-feedback gradient compression (DESIGN.md §5): the
+gradient is quantised per-tensor before the update and the quantisation
+residual is carried to the next step, bounding the bias (1-bit Adam style).
+On real pods the quantised tensor is also what crosses the DP reduction;
+here the residual-carry semantics are what we validate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: dict          # fp32 master copy of params
+    mu: dict              # first moment (fp32)
+    nu: dict              # second moment (fp32)
+    error: dict | None    # int8-compression residual (fp32), or None
+
+
+def _f32(tree):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+
+
+def adamw_init(params, *, compress: str | None = None) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    err = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+           if compress == "int8_ef" else None)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=_f32(params),
+        mu=zeros,
+        nu=jax.tree.map(jnp.copy, zeros),
+        error=err,
+    )
+
+
+def _quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    compress: str | None = None,
+    param_dtype=jnp.bfloat16,
+):
+    """Returns (new_params_compute_dtype, new_state)."""
+    step = state.step + 1
+    tf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** tf
+    bc2 = 1.0 - b2 ** tf
+
+    new_error = state.error
+
+    def prep_grad(g, e):
+        g = g.astype(jnp.float32)
+        if compress == "int8_ef":
+            q, scale = _quantize_int8(g + e)
+            gq = q.astype(jnp.float32) * scale
+            return gq, (g + e) - gq
+        return g, e
+
+    if compress == "int8_ef":
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(state.error)
+        prepped = [prep_grad(g, e) for g, e in zip(flat_g, flat_e)]
+        grads_f = tdef.unflatten([p[0] for p in prepped])
+        new_error = tdef.unflatten([p[1] for p in prepped])
+    else:
+        grads_f = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    mu = jax.tree.map(lambda g, m: b1 * m + (1 - b1) * g, grads_f, state.mu)
+    nu = jax.tree.map(lambda g, v: b2 * v + (1 - b2) * g * g, grads_f,
+                      state.nu)
+    master = jax.tree.map(
+        lambda p, m, v: p - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                  + weight_decay * p),
+        state.master, mu, nu,
+    )
+    params = jax.tree.map(lambda p: p.astype(param_dtype), master)
+    return params, AdamWState(step=step, master=master, mu=mu, nu=nu,
+                              error=new_error)

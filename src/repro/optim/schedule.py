@@ -1,0 +1,27 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (min_frac + (1 - min_frac) * cos)
+
+    return lr
+
+
+def linear_warmup_cosine(
+    base_lr: float, warmup_steps: int, total_steps: int, min_frac: float = 0.1
+):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1),
+                          min_frac)
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return lr

@@ -1,0 +1,4 @@
+from repro.runtime.watchdog import StragglerWatchdog
+from repro.runtime.elastic import derive_mesh_shape
+
+__all__ = ["StragglerWatchdog", "derive_mesh_shape"]

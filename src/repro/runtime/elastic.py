@@ -1,0 +1,42 @@
+"""Elastic scaling: derive the mesh from whatever devices survived.
+
+Checkpoints store unsharded logical arrays (checkpoint/manager.py), so a
+relaunch on fewer (or more) chips only needs a mesh that (a) keeps the
+model axis large enough for TP divisibility and (b) puts the rest on data.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def derive_mesh_shape(
+    n_devices: int, *, model_parallel: int = 16, min_model: int = 1
+) -> tuple[dict[str, int], int]:
+    """Returns ({axis: size}, dropped_devices).
+
+    Shrinks the model axis by powers of two until it divides the device
+    count; leftover devices that can't form a full data row are dropped
+    (reported so the controller can log the capacity loss).
+    """
+    mp = model_parallel
+    while mp > min_model and (n_devices < mp or n_devices % mp):
+        mp //= 2
+    data = max(1, n_devices // mp)
+    used = mp * data
+    return {"data": data, "model": mp}, n_devices - used
+
+
+def make_elastic_mesh(*, model_parallel: int = 16) -> jax.sharding.Mesh:
+    n = len(jax.devices())
+    shape, dropped = derive_mesh_shape(n, model_parallel=model_parallel)
+    if dropped:
+        import logging
+
+        logging.getLogger(__name__).warning(
+            "elastic mesh drops %d devices (%d usable)", dropped, n - dropped
+        )
+    devs = jax.devices()[: shape["data"] * shape["model"]]
+    import numpy as np
+
+    arr = np.array(devs).reshape(shape["data"], shape["model"])
+    return jax.sharding.Mesh(arr, ("data", "model"))

@@ -1,0 +1,4 @@
+from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.engine import generate
+
+__all__ = ["SamplerConfig", "sample", "generate"]

@@ -1,0 +1,44 @@
+"""Batched generation engine: prefill once, decode with the runahead
+sampler.  The decode loop is a lax.scan (single compiled step re-used), the
+idiomatic TPU serving shape."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.decode import decode_step, prefill
+from repro.serving.sampler import SamplerConfig, sample
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    prompt: jax.Array,                 # (B, S) int32
+    n_new: int,
+    key: jax.Array,
+    *,
+    context: int | None = None,
+    sampler: SamplerConfig = SamplerConfig(),
+    encoder_frames: jax.Array | None = None,
+) -> jax.Array:
+    """Returns generated tokens (B, n_new) int32."""
+    B, S = prompt.shape
+    context = context or (S + n_new)
+    logits, cache = prefill(
+        cfg, params, prompt, context, encoder_frames=encoder_frames
+    )
+    key, sub = jax.random.split(key)
+    first = sample(logits, sub, sampler)
+
+    def body(carry, i):
+        token, pos, cache, key = carry
+        key, sub = jax.random.split(key)
+        logits, cache = decode_step(cfg, params, token, pos, cache)
+        nxt = sample(logits, sub, sampler)
+        return (nxt, pos + 1, cache, key), token
+
+    (_, _, _, _), toks = jax.lax.scan(
+        body, (first, jnp.int32(S), cache, key), jnp.arange(n_new)
+    )
+    return toks.swapaxes(0, 1)                              # (B, n_new)

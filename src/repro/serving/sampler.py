@@ -1,0 +1,100 @@
+"""Token sampler built on runahead bisection (the paper's technique as a
+first-class serving feature — DESIGN.md §3).
+
+Every monotone solve in the sampling pipeline goes through speculative
+bisection instead of a vocab sort:
+
+  top-k        count(logits > tau) = k          (fused Pallas kernel path)
+  top-p        mass(probs >= tau) = p
+  temperature  H(softmax(z/T)) = H_target       (entropy-calibrated)
+
+A 152k-vocab sort is O(V log V) with poor TPU characteristics; the
+runahead solve is `rounds` fused counting passes (rounds = ceil(steps/k)),
+each answering 2**spec_k - 1 candidates at once — and the Pallas path keeps
+the logits row VMEM-resident across ALL rounds (one HBM pass total).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.applications import (
+    entropy_temperature,
+    topk_threshold,
+    topp_threshold,
+)
+from repro.kernels import ops as kernel_ops
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 1.0
+    target_entropy: float | None = None   # overrides temperature if set
+    top_k: int = 0                        # 0 = off
+    top_p: float = 0.0                    # 0 = off
+    spec_k: int = 5                       # speculation depth (paper's k)
+    rounds: int = 8
+    backend: str = "jnp"                  # "jnp" | "pallas"
+
+
+def _topk_mask(logits: jax.Array, k: int, sc: SamplerConfig) -> jax.Array:
+    """(B, V) bool mask of the top-k logits per row."""
+    if sc.backend == "pallas":
+        lo, hi = kernel_ops.runahead_topk_threshold(
+            logits, k_target=k, rounds=sc.rounds, spec_k=sc.spec_k
+        )
+        return logits > hi[:, None]
+    solve = jax.vmap(
+        lambda row: topk_threshold(row, k, spec_k=sc.spec_k,
+                                   rounds=sc.rounds)
+    )
+    lo, hi = solve(logits)
+    return logits > hi[:, None]
+
+
+def _topp_mask(probs: jax.Array, p: float, sc: SamplerConfig) -> jax.Array:
+    solve = jax.vmap(
+        lambda row: topp_threshold(row, p, spec_k=sc.spec_k,
+                                   rounds=sc.rounds)
+    )
+    lo, hi = solve(probs)
+    return probs >= lo[:, None]
+
+
+def sample(
+    logits: jax.Array,                    # (B, V) f32
+    key: jax.Array,
+    sc: SamplerConfig = SamplerConfig(),
+) -> jax.Array:
+    """Sample next tokens (B,) int32."""
+    z = logits.astype(jnp.float32)
+    # Clamp to a finite dynamic range: padded-vocab columns arrive as -1e30
+    # (models/layers.py), which would blow the bisection bracket to 1e30
+    # wide.  exp(-80) is ~1.8e-35 — numerically zero relative to the max in
+    # f32 — so clamping at max-80 is exact for softmax/top-k purposes.
+    z = jnp.maximum(z, jnp.max(z, axis=-1, keepdims=True) - 80.0)
+
+    if sc.target_entropy is not None:
+        t = jax.vmap(
+            lambda row: entropy_temperature(row, sc.target_entropy,
+                                            spec_k=sc.spec_k)
+        )(z)
+        z = z / t[:, None]
+    elif sc.temperature != 1.0:
+        z = z / sc.temperature
+
+    if sc.top_k > 0:
+        z = jnp.where(_topk_mask(z, sc.top_k, sc), z, NEG_INF)
+    if sc.top_p > 0.0:
+        probs = jax.nn.softmax(z, axis=-1)
+        z = jnp.where(_topp_mask(probs, sc.top_p, sc), z, NEG_INF)
+
+    return jax.random.categorical(key, z, axis=-1).astype(jnp.int32)
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.train.step import TrainConfig, loss_fn, make_train_step
+
+__all__ = ["TrainConfig", "loss_fn", "make_train_step"]

@@ -1,0 +1,152 @@
+"""Training step: CE loss, microbatch gradient accumulation, clipping,
+AdamW — one jit-compiled function suitable for pjit/GSPMD sharding.
+
+Distribution notes (DESIGN.md §5):
+  * the batch dim is sharded over ("pod", "data"); the DP gradient
+    all-reduce is GSPMD-inserted by the backward pass in the gradient
+    dtype (bf16 params -> bf16 reduction = 2x collective-byte compression
+    vs f32 — this is the baseline gradient compression; int8 error
+    feedback is the optional optimizer-level stage).
+  * microbatching: grads accumulate across a lax.scan over microbatches,
+    so peak activation memory is one microbatch while the collective
+    fires once per step (accumulate-then-reduce would double-count with
+    GSPMD; accumulating the *already-reduced* grads is equivalent since
+    the reduction is linear).
+  * remat: scan-over-layers blocks are checkpointed (transformer.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward
+from repro.optim.adamw import AdamWState, adamw_update
+from repro.optim.clip import clip_by_global_norm, clip_by_quantile
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    clip_norm: float = 1.0
+    clip_mode: str = "global"        # "global" | "quantile" (paper technique)
+    aux_weight: float = 0.01         # MoE load-balance loss weight
+    z_weight: float = 1e-4           # z-loss (logit drift control)
+    n_microbatches: int = 1
+    capacity_mode: str = "fifo"      # "fifo" | "bisect" (paper technique)
+    moe_groups: int = 1              # GShard groups (= DP shards at scale)
+    compress: str | None = None      # None | "int8_ef"
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params,
+    batch: dict,
+    tc: TrainConfig,
+) -> tuple[jax.Array, dict]:
+    logits, aux = forward(
+        cfg, params, batch["tokens"],
+        encoder_frames=batch.get("frames"),
+        capacity_mode=tc.capacity_mode,
+        moe_groups=tc.moe_groups,
+        remat=tc.remat,
+    )
+    targets = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)              # (B, S)
+    # target logit via masked reduce, not gather: a gather indexes across
+    # the vocab-sharded dim (GSPMD would all-gather the logits); the
+    # compare+select+reduce fuses and partitions as local-reduce + psum.
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=targets.dtype)
+    tgt_logit = jnp.sum(
+        jnp.where(vocab_iota[None, None, :] == targets[..., None],
+                  logits, 0.0),
+        axis=-1,
+    )
+    ce = jnp.mean(logz - tgt_logit)
+    z_loss = jnp.mean(jnp.square(logz))
+    aux_term = tc.aux_weight * aux / max(cfg.n_layers, 1)
+    loss = ce + tc.z_weight * z_loss + aux_term
+    return loss, {"ce": ce, "z_loss": z_loss, "aux": aux}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    tc: TrainConfig,
+    lr_fn: Callable[[jax.Array], jax.Array],
+    grad_constraint: Callable | None = None,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    Close over static configs so the jitted signature is pure arrays.
+    grad_constraint: optional pytree->pytree sharding annotation applied to
+    the gradients before the optimizer — constraining them to the ZeRO-1
+    optimizer-state layout turns the DP all-reduce into a reduce-scatter
+    (half the collective bytes; §Perf).
+    """
+    param_dtype = jnp.dtype(tc.param_dtype)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, tc), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if tc.n_microbatches > 1:
+            n = tc.n_microbatches
+
+            def split(x):
+                return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def acc(carry, mb):
+                g_acc, loss_acc = carry
+                loss, metrics, g = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, loss_acc + loss), metrics
+
+            (g_sum, loss_sum), metrics = jax.lax.scan(
+                acc, (zero, jnp.float32(0.0)), mbs
+            )
+            grads = jax.tree.map(lambda g: g / n, g_sum)
+            loss = loss_sum / n
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if grad_constraint is not None:
+            grads = grad_constraint(grads)
+
+        if tc.clip_mode == "quantile":
+            grads, _ = clip_by_quantile(grads, 0.95)
+        else:
+            grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+            metrics = {**metrics, "grad_norm": gnorm}
+
+        lr = lr_fn(opt_state.step)
+        params, opt_state = adamw_update(
+            grads, opt_state, lr,
+            b1=tc.b1, b2=tc.b2, weight_decay=tc.weight_decay,
+            compress=tc.compress, param_dtype=param_dtype,
+        )
+        metrics = {**metrics, "loss": loss, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step

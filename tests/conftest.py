@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Tests run on the single CPU device (the 512-device dry-run is exercised
+# via its own launcher subprocess, never inside pytest — DESIGN.md §5).
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,157 @@
+"""Core property tests: runahead bisection vs the serial baseline.
+
+The paper's central claim (§IV.B) is that one runahead round with 2**k - 1
+speculative points is EQUIVALENT to k serial bisection steps.  Our
+implementation makes that equivalence bit-exact (midpoint-tree grids), so
+the properties below assert exact float equality, not allclose.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    find_root_runahead,
+    find_root_serial,
+    find_root_serial_batched,
+    find_root_runahead_batched,
+    iterations_for_error,
+    make_paper_f,
+)
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64_for_this_module_only():
+    """f64 is needed for the deep-bisection bit-exactness asserts, but the
+    flag is global — restore it so later test modules see default f32
+    promotion semantics (bf16 model tests are sensitive to it)."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+def poly(roots):
+    def f(x):
+        y = jnp.ones_like(x)
+        for r in roots:
+            y = y * (x - r)
+        return y
+
+    return f
+
+
+class TestSerialBaseline:
+    def test_paper_iteration_count(self):
+        # paper §VI.B: interval (1,2), eps=2^-6 -> 6 iterations
+        assert iterations_for_error(1.0, 2.0, 2.0 ** -6) == 6
+
+    def test_converges_to_root(self):
+        f = poly([0.3])
+        root = find_root_serial(f, jnp.float64(0.0), jnp.float64(1.0), 50)
+        assert abs(float(root) - 0.3) < 1e-12
+
+    def test_no_early_exit(self):
+        # Algorithm 1 keeps iterating even when the midpoint IS the root:
+        # after hitting x=0.5 exactly it continues halving.
+        f = poly([0.5])
+        r10 = find_root_serial(f, jnp.float64(0.0), jnp.float64(1.0), 10)
+        r1 = find_root_serial(f, jnp.float64(0.0), jnp.float64(1.0), 1)
+        assert float(r1) == 0.5
+        assert float(r10) != 0.5  # kept moving past the exact root
+
+    def test_product_vs_signbit_zero_midpoint(self):
+        # exact zero at first midpoint: product mode goes right (a <- root),
+        # signbit mode goes left (b <- root) — the paper's two conventions.
+        f = poly([0.5])
+        rp = find_root_serial(f, jnp.float64(0.0), jnp.float64(1.0), 2,
+                              mode="product")
+        rs = find_root_serial(f, jnp.float64(0.0), jnp.float64(1.0), 2,
+                              mode="signbit")
+        assert float(rp) == 0.75
+        assert float(rs) == 0.25
+
+
+class TestRunaheadEquivalence:
+    @pytest.mark.parametrize("spec_k", [1, 2, 3, 4, 5])
+    @pytest.mark.parametrize("iterations", [1, 3, 6, 12, 17, 24])
+    def test_bitexact_vs_serial(self, spec_k, iterations):
+        f = make_paper_f(30)
+        a, b = jnp.float64(1.0), jnp.float64(2.0)
+        rs = find_root_serial(f, a, b, iterations, mode="signbit")
+        rr = find_root_runahead(f, a, b, iterations, spec_k)
+        assert float(rs) == float(rr), (spec_k, iterations)
+
+    @pytest.mark.parametrize("spec_k", [2, 3])
+    def test_xor_select_matches_on_monotone(self, spec_k):
+        # single bracketed root -> monotone sign vector -> paper's XOR rule
+        # agrees with the serial-exact walk.
+        f = make_paper_f(30)
+        a, b = jnp.float64(1.0), jnp.float64(2.0)
+        r_walk = find_root_runahead(f, a, b, 12, spec_k, select="walk")
+        r_xor = find_root_runahead(f, a, b, 12, spec_k, select="xor")
+        assert float(r_walk) == float(r_xor)
+
+    @given(
+        root=st.floats(0.05, 0.95),
+        spec_k=st.integers(1, 5),
+        iterations=st.integers(1, 30),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_property_bitexact(self, root, spec_k, iterations):
+        f = poly([root])
+        a, b = jnp.float64(0.0), jnp.float64(1.0)
+        rs = find_root_serial(f, a, b, iterations, mode="signbit")
+        rr = find_root_runahead(f, a, b, iterations, spec_k)
+        assert float(rs) == float(rr)
+
+    @given(
+        r1=st.floats(0.1, 0.4), r2=st.floats(0.45, 0.6),
+        r3=st.floats(0.65, 0.9), spec_k=st.integers(1, 4),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_multiple_roots_walk_still_matches_serial(self, r1, r2, r3,
+                                                      spec_k):
+        # three roots in the interval: the sign vector is NOT monotone, the
+        # paper's XOR rule may pick a different (still valid) root, but the
+        # serial-exact walk must track Algorithm 1 exactly.
+        f = poly([r1, r2, r3])
+        a, b = jnp.float64(0.0), jnp.float64(1.0)
+        rs = find_root_serial(f, a, b, 24, mode="signbit")
+        rr = find_root_runahead(f, a, b, 24, spec_k)
+        assert float(rs) == float(rr)
+
+    def test_round_count_law(self):
+        # paper §IV.B: n iterations at speculation k need ceil(n/k) rounds.
+        # 2520 serial steps at k=10 -> 252 rounds (the paper's GPU setup).
+        assert math.ceil(2520 / 10) == 252
+        # and the API resolves exactly iterations steps regardless of k:
+        f = poly([1 / 3])
+        for k in (1, 2, 5, 7):
+            rr = find_root_runahead(
+                f, jnp.float64(0.0), jnp.float64(1.0), 20, k
+            )
+            rs = find_root_serial(
+                f, jnp.float64(0.0), jnp.float64(1.0), 20, mode="signbit"
+            )
+            assert float(rr) == float(rs)
+
+
+class TestBatched:
+    def test_batched_matches_scalar(self):
+        f = poly([0.37])
+        a = jnp.zeros((8,), jnp.float64)
+        b = jnp.ones((8,), jnp.float64)
+        rs = find_root_serial_batched(f, a, b, 20, "signbit")
+        rr = find_root_runahead_batched(f, a, b, 20, 3)
+        np.testing.assert_array_equal(np.asarray(rs), np.asarray(rr))
+
+    def test_error_bound(self):
+        # after n iterations the bracket has width (b-a)/2^n; the returned
+        # midpoint is within (b-a)/2^n of a true root.
+        f = make_paper_f(40)
+        n = iterations_for_error(1.0, 2.0, 2.0 ** -20)
+        r = find_root_runahead(f, jnp.float64(1.0), jnp.float64(2.0), n, 4)
+        assert abs(float(r) - math.pi / 2) <= 2.0 ** -20 + 1e-9

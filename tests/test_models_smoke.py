@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests (deliverable f): reduced config, one
+forward + one decode step on CPU, asserting shapes and finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, input_shapes
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+)
+from repro.models.testing import reduced_config
+
+B, S = 2, 16
+
+
+def _inputs(cfg, key):
+    tokens = jax.random.randint(key, (B, S + 2), 0, cfg.vocab)
+    frames = (
+        jax.random.normal(key, (B, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encdec else None
+    )
+    return tokens, frames
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_finite(arch, rng_key):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, rng_key)
+    tokens, frames = _inputs(cfg, rng_key)
+    logits, aux = forward(cfg, params, tokens, encoder_frames=frames,
+                          remat=False)
+    assert logits.shape == (B, S + 2, cfg.vocab)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_with_remat_matches(arch, rng_key):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, rng_key)
+    tokens, frames = _inputs(cfg, rng_key)
+    l1, _ = forward(cfg, params, tokens, encoder_frames=frames, remat=False)
+    l2, _ = forward(cfg, params, tokens, encoder_frames=frames, remat=True)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch, rng_key):
+    """prefill(S) + decode_step(S), decode_step(S+1) must reproduce the
+    full-forward logits at those positions (exactly for deterministic
+    archs; MoE compared with drop-free capacity)."""
+    cfg = reduced_config(arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=1000.0)  # no drops
+    # recurrent families reconstruct decode state from the chunked-parallel
+    # scan: equivalent up to reassociation at bf16 precision (eps = 2^-8;
+    # exact-math equivalence is pinned separately in tests/test_mixers.py
+    # at f32)
+    atol = 4e-3 if cfg.family in ("ssm", "hybrid") else 1e-4
+    params = init_params(cfg, rng_key)
+    tokens, frames = _inputs(cfg, rng_key)
+    full, _ = forward(cfg, params, tokens, encoder_frames=frames, remat=False)
+
+    pre, cache = prefill(cfg, params, tokens[:, :S], context=32,
+                         encoder_frames=frames)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, S - 1]),
+                               atol=atol)
+    lg, cache = decode_step(cfg, params, tokens[:, S], jnp.int32(S), cache)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, S]),
+                               atol=atol)
+    lg, cache = decode_step(cfg, params, tokens[:, S + 1], jnp.int32(S + 1),
+                            cache)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, S + 1]),
+                               atol=atol)
+
+
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-1.3b"])
+def test_subquadratic_ring_cache_decode(arch, rng_key):
+    """Decode far past the SWA window / with O(1) state: cache capacity
+    stays bounded and logits stay finite."""
+    cfg = reduced_config(arch)
+    params = init_params(cfg, rng_key)
+    context = 16  # global-layer capacity
+    tokens = jax.random.randint(rng_key, (B, 40), 0, cfg.vocab)
+    _, cache = prefill(cfg, params, tokens[:, :8], context=context)
+    for pos in range(8, 24):
+        lg, cache = decode_step(cfg, params, tokens[:, pos], jnp.int32(pos),
+                                cache)
+        assert bool(jnp.isfinite(lg).all()), (arch, pos)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_loads_and_counts_params(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    n_active = cfg.param_count(active_only=True)
+    assert n > 0 and n_active <= n
+    # order-of-magnitude sanity vs the name's billions tag
+    expected = {
+        "internlm2-1.8b": 1.8e9, "deepseek-coder-33b": 33e9,
+        "qwen3-4b": 4e9, "qwen1.5-4b": 4e9, "chameleon-34b": 34e9,
+        "whisper-tiny": 39e6, "hymba-1.5b": 1.5e9, "xlstm-1.3b": 1.3e9,
+        "qwen2-moe-a2.7b": 14e9, "granite-moe-3b-a800m": 3e9,
+    }[arch]
+    assert 0.3 * expected < n < 3.0 * expected, (arch, n, expected)
+
+
+def test_shape_grid_covers_40_cells():
+    cells = 0
+    for arch in ARCH_IDS:
+        shapes = input_shapes(arch)
+        from repro.configs.registry import skipped_shapes
+
+        cells += len(shapes) + len(skipped_shapes(arch))
+    assert cells == 40
+
+
+def test_int8_kv_cache_decode(rng_key):
+    """Quantised KV cache: decode within ~1% of the bf16 path (beyond-paper
+    memory-term optimisation, DESIGN.md §Perf)."""
+    import jax.numpy as jnp
+
+    cfg = reduced_config("qwen3-4b")
+    params = init_params(cfg, rng_key)
+    tokens, _ = _inputs(cfg, rng_key)
+    full, _ = forward(cfg, params, tokens, remat=False)
+    _, cache = prefill(cfg, params, tokens[:, :S], context=32,
+                       kv_dtype=jnp.int8)
+    assert cache[0]["kv"].k.dtype == jnp.int8
+    lg, cache = decode_step(cfg, params, tokens[:, S], jnp.int32(S), cache)
+    scale = float(jnp.abs(full).max())
+    assert float(jnp.abs(lg - full[:, S]).max()) < 0.02 * max(scale, 1.0)

@@ -1,0 +1,85 @@
+"""Runahead-bisection sampler: mask exactness vs sort references, entropy
+calibration, backend parity, sampling distribution sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampler import SamplerConfig, greedy, sample
+
+
+def logits_batch(B=4, V=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(B, V)).astype(np.float32) * 3)
+
+
+def test_topk_restricts_support():
+    z = logits_batch()
+    sc = SamplerConfig(top_k=10)
+    keys = jax.random.split(jax.random.PRNGKey(0), 200)
+    toks = jax.vmap(lambda k: sample(z, k, sc))(keys)      # (200, B)
+    topk_sets = [set(np.argsort(np.asarray(z[b]))[::-1][:10].tolist())
+                 for b in range(z.shape[0])]
+    for b in range(z.shape[0]):
+        assert set(np.asarray(toks[:, b]).tolist()) <= topk_sets[b]
+
+
+def test_topp_restricts_support():
+    z = logits_batch(seed=1)
+    sc = SamplerConfig(top_p=0.5)
+    keys = jax.random.split(jax.random.PRNGKey(1), 200)
+    toks = jax.vmap(lambda k: sample(z, k, sc))(keys)
+    for b in range(z.shape[0]):
+        p = jax.nn.softmax(z[b])
+        order = np.argsort(np.asarray(p))[::-1]
+        cum = np.cumsum(np.asarray(p)[order])
+        nucleus = set(order[: int(np.searchsorted(cum, 0.5) + 1)].tolist())
+        assert set(np.asarray(toks[:, b]).tolist()) <= nucleus
+
+
+def test_pallas_backend_matches_jnp():
+    z = logits_batch(seed=2)
+    k1 = jax.random.PRNGKey(3)
+    t_j = sample(z, k1, SamplerConfig(top_k=25, backend="jnp"))
+    t_p = sample(z, k1, SamplerConfig(top_k=25, backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(t_j), np.asarray(t_p))
+
+
+def test_entropy_calibration():
+    z = logits_batch(seed=4)
+    sc = SamplerConfig(target_entropy=2.5)
+    # calibration happens inside sample(); check the solve directly
+    from repro.core.applications import entropy_temperature
+
+    for b in range(z.shape[0]):
+        t = entropy_temperature(z[b], 2.5)
+        lp = jax.nn.log_softmax(z[b] / t)
+        h = float(-(jnp.exp(lp) * lp).sum())
+        assert abs(h - 2.5) < 0.05
+
+
+def test_greedy():
+    z = logits_batch(seed=5)
+    np.testing.assert_array_equal(
+        np.asarray(greedy(z)), np.argmax(np.asarray(z), -1)
+    )
+
+
+def test_padded_vocab_never_sampled():
+    """Columns masked to -1e30 (padded vocab) must never be drawn."""
+    z = np.array(logits_batch(seed=6))
+    z[:, -100:] = -1e30
+    sc = SamplerConfig(top_k=50)
+    keys = jax.random.split(jax.random.PRNGKey(7), 100)
+    toks = jax.vmap(lambda k: sample(jnp.asarray(z), k, sc))(keys)
+    assert int(np.asarray(toks).max()) < z.shape[1] - 100
+
+
+def test_temperature_scaling_sharpens():
+    z = logits_batch(seed=8)
+    keys = jax.random.split(jax.random.PRNGKey(9), 300)
+    cold = jax.vmap(lambda k: sample(z, k, SamplerConfig(temperature=0.1)))(keys)
+    hot = jax.vmap(lambda k: sample(z, k, SamplerConfig(temperature=2.0)))(keys)
+    # cold sampling concentrates on far fewer distinct tokens
+    assert len(set(np.asarray(cold[:, 0]).tolist())) < \
+        len(set(np.asarray(hot[:, 0]).tolist()))
