@@ -1,14 +1,20 @@
 """Benchmark harness entry point — one module per paper table/figure plus
 the beyond-paper LM-integration benches.  Prints ``name,us_per_call,derived``
-CSV (deliverable d).
+CSV (deliverable d).  Modules exposing ``json_payload() -> (name, dict)``
+additionally get a machine-readable artifact written to the repo root
+(e.g. ``BENCH_sampler.json`` — the sampler perf trajectory).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig4,fig6]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 ALL = [
     "fig4_thread_sweep",
@@ -38,6 +44,16 @@ def main(argv=None) -> int:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
             for line in mod.run():
                 print(line, flush=True)
+            payload_fn = getattr(mod, "json_payload", None)
+            if payload_fn is not None:
+                artifact = payload_fn()
+                if artifact is not None:
+                    name, payload = artifact
+                    path = os.path.join(REPO_ROOT, name)
+                    with open(path, "w") as f:
+                        json.dump(payload, f, indent=2)
+                        f.write("\n")
+                    print(f"# wrote {path}", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             traceback.print_exc()

@@ -4,8 +4,9 @@ Public API:
   find_root_serial            Algorithm 1 baseline (paper §III.B)
   find_root_runahead          lane-level runahead bisection (paper §IV)
   find_root_runahead_sharded  chip-level (mesh axis) runahead bisection
-  runahead_solve              generic interval solve with fused multi_eval
-  applications                LM-stack monotone solves built on the above
+  runahead_solve              generic scalar interval solve (B=1 engine view)
+  solver                      BATCHED runahead solve engine + backend registry
+  applications                LM-stack monotone solves built on the engine
 """
 from repro.core.bisect import (
     find_root_serial,
@@ -27,9 +28,12 @@ from repro.core.paper_functions import (
     PAPER_TERMS,
     PAPER_EPS_CPU,
 )
-from repro.core import applications
+from repro.core import applications, solver
+from repro.core.solver import MonotoneProblem
 
 __all__ = [
+    "MonotoneProblem",
+    "solver",
     "find_root_serial",
     "find_root_serial_batched",
     "iterations_for_error",

@@ -1,41 +1,49 @@
 """LM-framework applications of runahead bisection (DESIGN.md §3).
 
-Every monotone scalar solve in the LM stack is phrased as a root-find and
-accelerated with the paper's speculation: ``multi_eval`` evaluates ALL
-2**spec_k - 1 candidate points in ONE pass over the large operand (vocab
-logits / router probs / grad norms).  The speculative width is the paper's
-"thread count"; here it is a broadcast dimension that the VPU vectorises,
-and the 2**k-partition sign walk collapses k bisection steps per pass —
-exactly the paper's O(n) -> O(n/k) round reduction, with the operand pass
-(not a thread) as the unit of cost.
+Every monotone solve in the LM stack is phrased as a root-find and routed
+through the batched engine in ``repro.core.solver``: one ``multi_eval``
+answers ALL ``(B, 2**spec_k - 1)`` candidate points in ONE pass over the
+large operand (vocab logits / router probs / grad norms), and the batch
+axis is native — no ``vmap`` of a scalar solve.  The speculative width is
+the paper's "thread count"; here it is a broadcast dimension the VPU
+vectorises, and the 2**k-partition sign walk collapses k bisection steps
+per pass — exactly the paper's O(n) -> O(n/k) round reduction, with the
+operand pass (not a thread) as the unit of cost.
 
-Backends:
+Backends (DESIGN.md §4 — resolved per problem kind by the solver registry):
   * "jnp"    — pure jnp broadcast-compare-reduce (oracle; always available)
-  * "pallas" — fused VMEM-resident kernels from repro.kernels (TPU target,
+  * "pallas" — fused VMEM-tiled kernels from repro.kernels (TPU target,
                validated on CPU in interpret mode)
+
+Every function accepts a single row ``(V,)`` or a batch ``(B, V)`` and
+returns correspondingly unbatched / batched results.
 """
 from __future__ import annotations
-
-from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.runahead import runahead_solve
+from repro.core import solver
 
 Array = jax.Array
 
 
-def _count_above(x: Array, taus: Array) -> Array:
-    """counts[m] = #{i : x[i] > taus[m]} — one pass, all candidates."""
-    return jnp.sum(x[None, :] > taus[:, None], axis=-1).astype(jnp.float32)
+def _rows(x: Array) -> tuple[Array, bool]:
+    """Promote (V,) -> (1, V); report whether to squeeze results."""
+    x = jnp.asarray(x)
+    if x.ndim == 1:
+        return x[None, :], True
+    if x.ndim != 2:
+        raise ValueError(f"expected 1-D or 2-D operand, got shape {x.shape}")
+    return x, False
 
 
-def _mass_at_or_above(p: Array, taus: Array) -> Array:
-    """mass[m] = sum of p[i] where p[i] >= taus[m]."""
-    keep = p[None, :] >= taus[:, None]
-    return jnp.sum(jnp.where(keep, p[None, :], 0.0), axis=-1)
+def _maybe_squeeze(out, squeeze: bool):
+    if not squeeze:
+        return out
+    if isinstance(out, tuple):
+        return tuple(o[0] for o in out)
+    return out[0]
 
 
 # ---------------------------------------------------------------------------
@@ -48,36 +56,34 @@ def topk_threshold(
     *,
     spec_k: int = 5,
     rounds: int = 8,
-    count_fn: Callable[[Array, Array], Array] | None = None,
+    backend: str = "jnp",
 ) -> tuple[Array, Array]:
-    """Bracket the k-th largest logit: returns (lo, hi) with
-    count(logits > lo) >= k > count(logits > hi).
+    """Bracket the k-th largest logit per row: returns (lo, hi) with
+    count(row > lo) >= k > count(row > hi).
 
-    f(tau) = k - count(logits > tau) is monotone non-decreasing; each
-    multi_eval is one vocab pass answering all 2**spec_k - 1 candidates.
+    f(tau) = k - count(row > tau) is monotone non-decreasing; each
+    multi_eval is one operand pass answering all candidates for all rows.
     rounds * spec_k total serial-equivalent bisection steps (40 by default:
     float32 logits are fully resolved well before that).
     """
-    count = count_fn or _count_above
-    lo0 = jnp.min(logits) - 1.0
-    hi0 = jnp.max(logits) + 1.0
-
-    def multi_eval(taus: Array) -> Array:
-        return jnp.float32(k) - count(logits, taus)
-
-    return runahead_solve(multi_eval, lo0, hi0, rounds=rounds, spec_k=spec_k)
+    z, squeeze = _rows(logits)
+    out = solver.solve_kind(
+        "count_above", z, k=k, backend=backend, rounds=rounds, spec_k=spec_k
+    )
+    return _maybe_squeeze(out, squeeze)
 
 
 def topk_mask(logits: Array, k: int, **kw) -> Array:
-    """Boolean mask of the top-k logits.
+    """Boolean mask of the top-k logits per row.
 
     The solve converges to the (k+1)-th largest value v_{k+1}; the bracket
-    guarantees count(logits > hi) <= k, and once the bracket is tighter than
+    guarantees count(row > hi) <= k, and once the bracket is tighter than
     the v_k / v_{k+1} gap the mask holds exactly k elements (modulo ties at
     v_k, which any top-k definition must arbitrate).
     """
-    lo, hi = topk_threshold(logits, k, **kw)
-    return logits > hi
+    z, squeeze = _rows(logits)
+    lo, hi = topk_threshold(z, k, **kw)
+    return _maybe_squeeze(z > hi[:, None], squeeze)
 
 
 # ---------------------------------------------------------------------------
@@ -90,32 +96,31 @@ def topp_threshold(
     *,
     spec_k: int = 5,
     rounds: int = 8,
-    mass_fn: Callable[[Array, Array], Array] | None = None,
+    backend: str = "jnp",
 ) -> tuple[Array, Array]:
-    """Bracket tau such that the mass of {probs >= tau} crosses p.
+    """Bracket tau such that the mass of {row >= tau} crosses p per row.
 
-    f(tau) = p - mass(probs >= tau), monotone non-decreasing in tau.
-    The nucleus set is {probs > lo} (mass >= p, minimal up to bracket width).
+    f(tau) = p - mass(row >= tau), monotone non-decreasing in tau.
+    The nucleus set is {row > lo} (mass >= p, minimal up to bracket width).
     """
-    mass = mass_fn or _mass_at_or_above
-    lo0 = jnp.zeros((), probs.dtype)
-    hi0 = jnp.max(probs) + jnp.asarray(1e-6, probs.dtype)
-
-    def multi_eval(taus: Array) -> Array:
-        return jnp.asarray(p, probs.dtype) - mass(probs, taus)
-
-    return runahead_solve(multi_eval, lo0, hi0, rounds=rounds, spec_k=spec_k)
+    pr, squeeze = _rows(probs)
+    out = solver.solve_kind(
+        "mass_at_or_above", pr, p=p, backend=backend,
+        rounds=rounds, spec_k=spec_k,
+    )
+    return _maybe_squeeze(out, squeeze)
 
 
 def topp_mask(probs: Array, p: float | Array, **kw) -> Array:
     """Nucleus mask: smallest prob set with mass >= p (up to bracket width).
 
-    Uses `>= lo`: f(lo) < 0 guarantees mass(probs >= lo) > p, and the strict
+    Uses `>= lo`: f(lo) < 0 guarantees mass(row >= lo) > p, and the strict
     form can exactly exclude the boundary atom when the float32 bracket
     collapses onto it (mass would dip below p).
     """
-    lo, hi = topp_threshold(probs, p, **kw)
-    return probs >= lo
+    pr, squeeze = _rows(probs)
+    lo, hi = topp_threshold(pr, p, **kw)
+    return _maybe_squeeze(pr >= lo[:, None], squeeze)
 
 
 # ---------------------------------------------------------------------------
@@ -130,27 +135,20 @@ def entropy_temperature(
     t_hi: float = 20.0,
     spec_k: int = 4,
     rounds: int = 8,
+    backend: str = "jnp",
 ) -> Array:
-    """Solve softmax temperature T so that H(softmax(logits / T)) = target.
+    """Solve softmax temperature T per row with H(softmax(row / T)) = target.
 
     H is monotone increasing in T (for non-degenerate logits).  Each
-    multi_eval computes the entropy at all candidate temperatures in one
-    fused pass over the vocab (one (M, V) broadcast + reductions).
+    multi_eval computes the entropy at all candidate temperatures for all
+    rows in one fused pass over the vocab.
     """
-    z = logits.astype(jnp.float32)
-
-    def multi_eval(ts: Array) -> Array:
-        zt = z[None, :] / ts[:, None]                      # (M, V)
-        lse = jax.nn.logsumexp(zt, axis=-1, keepdims=True)
-        logp = zt - lse
-        h = -jnp.sum(jnp.exp(logp) * logp, axis=-1)        # (M,)
-        return jnp.asarray(target_entropy, jnp.float32) - h
-
-    lo, hi = runahead_solve(
-        multi_eval, jnp.float32(t_lo), jnp.float32(t_hi),
-        rounds=rounds, spec_k=spec_k,
+    z, squeeze = _rows(logits)
+    lo, hi = solver.solve_kind(
+        "entropy_at_temperature", z, target=target_entropy,
+        t_lo=t_lo, t_hi=t_hi, backend=backend, rounds=rounds, spec_k=spec_k,
     )
-    return (lo + hi) / 2
+    return _maybe_squeeze((lo + hi) / 2, squeeze)
 
 
 # ---------------------------------------------------------------------------
@@ -163,23 +161,18 @@ def quantile(
     *,
     spec_k: int = 5,
     rounds: int = 8,
+    backend: str = "jnp",
 ) -> Array:
     """Approximate q-quantile of a flat array by count bisection.
 
     Avoids a full sort: each multi_eval is one pass counting elements below
     all candidate cut points.  f(c) = count(x < c)/N - q, non-decreasing.
     """
-    xf = x.astype(jnp.float32).reshape(-1)
-    n = xf.shape[0]
-    lo0 = jnp.min(xf) - 1.0
-    hi0 = jnp.max(xf) + 1.0
-
-    def multi_eval(cs: Array) -> Array:
-        below = jnp.sum(xf[None, :] < cs[:, None], axis=-1)
-        return below.astype(jnp.float32) / n - jnp.asarray(q, jnp.float32)
-
-    lo, hi = runahead_solve(multi_eval, lo0, hi0, rounds=rounds, spec_k=spec_k)
-    return (lo + hi) / 2
+    xf = jnp.asarray(x).astype(jnp.float32).reshape(1, -1)
+    lo, hi = solver.solve_kind(
+        "count_below", xf, q=q, backend=backend, rounds=rounds, spec_k=spec_k
+    )
+    return (lo[0] + hi[0]) / 2
 
 
 # ---------------------------------------------------------------------------
@@ -192,29 +185,36 @@ def capacity_threshold(
     *,
     spec_k: int = 4,
     rounds: int = 6,
+    backend: str = "jnp",
 ) -> Array:
     """Per-expert router threshold keeping at most `capacity` tokens.
 
-    scores: (tokens,) router probabilities for ONE expert.  Returns tau such
-    that count(scores > tau) <= capacity <= count(scores >= tau-ish).  Used
-    vmapped over experts; each multi_eval is one pass over the token dim.
+    scores: (E, tokens) router probabilities, one row per expert (rows
+    belonging to other experts masked to a sentinel below the bracket).
+    Returns tau: (E,) with count(scores[e] > tau[e]) <= capacity guaranteed
+    by the bracket.  The expert axis IS the engine's batch axis — one fused
+    pass over the token dim answers every candidate for every expert.
     """
-    lo, hi = topk_threshold(scores, capacity, spec_k=spec_k, rounds=rounds)
-    return hi  # count(scores > hi) < capacity guaranteed by the bracket
+    s, squeeze = _rows(scores)
+    lo, hi = topk_threshold(
+        s, capacity, spec_k=spec_k, rounds=rounds, backend=backend
+    )
+    # count(scores > hi) < capacity guaranteed by the bracket
+    return _maybe_squeeze(hi, squeeze)
 
 
 # ---------------------------------------------------------------------------
-# batched wrappers (vmap across the data axis; speculation inside)
+# batched-name compatibility aliases (batch is now the native axis)
 # ---------------------------------------------------------------------------
 
 def topk_mask_batched(logits: Array, k: int, **kw) -> Array:
-    """logits: (B, V) -> bool mask (B, V)."""
-    return jax.vmap(lambda row: topk_mask(row, k, **kw))(logits)
+    """logits: (B, V) -> bool mask (B, V).  Alias of topk_mask."""
+    return topk_mask(logits, k, **kw)
 
 
 def topp_mask_batched(probs: Array, p: float, **kw) -> Array:
-    return jax.vmap(lambda row: topp_mask(row, p, **kw))(probs)
+    return topp_mask(probs, p, **kw)
 
 
 def entropy_temperature_batched(logits: Array, target: float, **kw) -> Array:
-    return jax.vmap(lambda row: entropy_temperature(row, target, **kw))(logits)
+    return entropy_temperature(logits, target, **kw)

@@ -176,31 +176,31 @@ def runahead_solve(
     spec_k: int,
     sign_lo: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Generic interval solve: returns the final (lo, hi) bracket.
+    """Generic SCALAR interval solve: returns the final (lo, hi) bracket.
 
-    This is the workhorse API for the LM applications — ``multi_eval`` takes
-    the vector of 2**spec_k - 1 speculative points and returns f at each in
-    ONE fused pass (e.g. one sweep over the vocab computing all candidate
-    threshold counts).  The speculative width is the paper's thread count;
-    on TPU it is VPU-lane parallelism and is nearly free (DESIGN.md §2).
+    ``multi_eval`` takes the vector of 2**spec_k - 1 speculative points and
+    returns f at each in ONE fused pass.  The speculative width is the
+    paper's thread count; on TPU it is VPU-lane parallelism and is nearly
+    free (DESIGN.md §2).
+
+    This is a B=1 view of the batched engine (repro.core.solver) — the LM
+    applications call the engine directly with batch as a native axis; this
+    wrapper remains the paper-facing scalar API and the oracle for the
+    kernel reference implementations.
     """
-    k = spec_k
-    if sign_lo is None:
-        sign_lo = _sign_bit(multi_eval(jnp.asarray(lo)[None])[0])
-
-    def round_body(_, carry):
-        lo, hi, sl = carry
-        grid = _midpoint_tree(lo, hi, k)
-        signs = _sign_bit(multi_eval(grid[1:-1]))
-        li, hi_, _, _ = _select_walk(signs, sl, k, jnp.int32(k))
-        full_signs = jnp.concatenate([sl[None], signs])
-        new_sl = full_signs[li]
-        return grid[li], grid[hi_], new_sl
+    from repro.core.solver import _solve_rounds
 
     lo = jnp.asarray(lo)
     hi = jnp.asarray(hi, dtype=lo.dtype)
-    lo_f, hi_f, _ = jax.lax.fori_loop(0, rounds, round_body, (lo, hi, sign_lo))
-    return lo_f, hi_f
+
+    def batched_eval(taus: jax.Array) -> jax.Array:       # (1, M) -> (1, M)
+        return multi_eval(taus[0])[None]
+
+    lo_f, hi_f = _solve_rounds(
+        batched_eval, lo[None], hi[None], rounds=rounds, spec_k=spec_k,
+        sign_lo=None if sign_lo is None else jnp.asarray(sign_lo)[None],
+    )
+    return lo_f[0], hi_f[0]
 
 
 def find_root_runahead_batched(

@@ -72,11 +72,24 @@ def find_root_runahead_sharded(
     b = jnp.asarray(b, dtype=a.dtype)
     sign_lo = _sign_bit(f(a[None])[0])
 
-    shmapped = jax.shard_map(
-        per_device,
-        mesh=mesh,
-        in_specs=(P(), P(), P(), P()),
-        out_specs=P(),
-        check_vma=False,
-    )
+    # jax.shard_map is top-level only in newer jax; fall back to the
+    # experimental location (same semantics; check_vma spelled check_rep).
+    if hasattr(jax, "shard_map"):
+        shmapped = jax.shard_map(
+            per_device,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P()),
+            out_specs=P(),
+            check_vma=False,
+        )
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        shmapped = _shard_map(
+            per_device,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P()),
+            out_specs=P(),
+            check_rep=False,
+        )
     return jax.jit(shmapped)(a, b, sign_lo, (a + b) / 2)

@@ -1,0 +1,324 @@
+"""Batched runahead solve engine — ONE speculative-bisection loop for every
+monotone solve in the repo (DESIGN.md §4).
+
+The paper collapses ``k`` serial bisection steps into one parallel round by
+evaluating all ``2**k - 1`` interior points of the uniform ``2**k``-partition
+at once.  The LM stack needs that solve *per row* of a batch (one threshold
+per vocab row, one temperature per sequence, one capacity cut per expert), so
+batch is a NATIVE axis of this engine — no ``vmap`` of a scalar solve:
+
+  * the speculative grid is built as a ``(B, 2**k + 1)`` midpoint tree
+    (bit-identical per row to serial bisection's midpoint recurrence);
+  * one ``multi_eval`` call answers all ``(B, M = 2**k - 1)`` candidates —
+    for the LM kinds this is a single fused pass over the large operand;
+  * the serial-exact sign walk runs as ``(B,)`` integer index vectors.
+
+Problem *kinds* name the monotone function family (``count_above``,
+``mass_at_or_above``, ``entropy_at_temperature``, ``count_below``); a
+registry maps ``(kind, backend)`` to a factory producing a
+:class:`MonotoneProblem`.  The ``"jnp"`` backend (this module) is the
+always-available broadcast-compare-reduce oracle; the ``"pallas"`` backend
+(``repro.kernels.solver_backends``, loaded lazily) answers the same
+candidates with fused VMEM-tiled kernels and may additionally supply a
+whole-solve kernel that keeps the operand row on-chip across ALL rounds.
+
+Sign convention (paper §IV.A): the stored bit is '1' iff the value is
+negative; an exact zero counts positive.  The walk only compares bits, so
+monotone non-increasing problems work unchanged — the bracket invariant is
+``sign(f(lo)) != sign(f(hi))``, not a direction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bisect import _sign_bit
+
+Array = jax.Array
+MultiEval = Callable[[Array], Array]          # taus (B, M) -> f values (B, M)
+
+
+@dataclasses.dataclass(frozen=True)
+class MonotoneProblem:
+    """A batch of monotone root-finds sharing one fused evaluator.
+
+    multi_eval: evaluates f at a ``(B, M)`` grid of candidates in one pass,
+        returning ``(B, M)`` values.  M varies between calls (1 for the
+        bracket-sign probe, ``2**spec_k - 1`` per round).
+    lo0 / hi0:  ``(B,)`` initial bracket endpoints, ``f`` changing sign
+        across each row's bracket.
+    sign_bit:   the sign convention mapping values to walk bits (default:
+        paper §IV.A, negative -> 1, exact zero -> 0).
+    sign_lo:    optional precomputed ``(B,)`` bit of ``f(lo0)``; when None
+        the engine spends one extra M=1 ``multi_eval`` probe on it.
+    fused_solve: optional whole-solve override ``(rounds=, spec_k=) ->
+        (lo, hi) | None`` — a backend's multi-round fused kernel (e.g. the
+        VMEM-resident top-k kernel).  Returning None falls back to the
+        generic round loop.
+    """
+
+    multi_eval: MultiEval
+    lo0: Array
+    hi0: Array
+    sign_bit: Callable[[Array], Array] = _sign_bit
+    sign_lo: Array | None = None
+    fused_solve: Callable[..., tuple[Array, Array] | None] | None = None
+
+
+# ---------------------------------------------------------------------------
+# the batched round loop
+# ---------------------------------------------------------------------------
+
+def _midpoint_tree(lo: Array, hi: Array, k: int) -> Array:
+    """(B,) brackets -> (B, 2**k + 1) bisection-tree grids.
+
+    Every interior point is the exact float midpoint of its parents, so each
+    row's grid is bit-identical to the midpoints serial bisection would
+    generate along any root path (see core/runahead.py for the scalar
+    derivation).
+    """
+    n = 1 << k
+    grid = jnp.zeros(lo.shape + (n + 1,), dtype=jnp.result_type(lo, hi))
+    grid = grid.at[..., 0].set(lo)
+    grid = grid.at[..., n].set(hi)
+    for level in range(1, k + 1):
+        d = 1 << (k - level)
+        idx = jnp.arange(d, n, 2 * d)  # odd multiples of d
+        grid = grid.at[..., idx].set(
+            (grid[..., idx - d] + grid[..., idx + d]) / 2
+        )
+    return grid
+
+
+def _select_walk(signs: Array, sign_lo: Array, k: int):
+    """Serial-exact sign walk over (B,) index grids [0, 2**k].
+
+    signs[b, i] is the bit of grid point i+1 (interior points only).
+    Returns (lo_idx, hi_idx, sign_lo_new), each (B,).
+    """
+    n = 1 << k
+    batch = signs.shape[0]
+
+    def body(_, st):
+        l, h, sl = st
+        mid = (l + h) // 2
+        smid = jnp.take_along_axis(signs, (mid - 1)[:, None], axis=1)[:, 0]
+        go_left = sl != smid
+        new_l = jnp.where(go_left, l, mid)
+        new_h = jnp.where(go_left, mid, h)
+        new_sl = jnp.where(go_left, sl, smid)
+        return new_l, new_h, new_sl
+
+    l0 = jnp.zeros((batch,), jnp.int32)
+    h0 = jnp.full((batch,), n, jnp.int32)
+    return jax.lax.fori_loop(0, k, body, (l0, h0, sign_lo))
+
+
+def _solve_rounds(
+    multi_eval: MultiEval,
+    lo0: Array,
+    hi0: Array,
+    *,
+    rounds: int,
+    spec_k: int,
+    sign_lo: Array | None = None,
+    sign_bit: Callable[[Array], Array] = _sign_bit,
+) -> tuple[Array, Array]:
+    """Run `rounds` speculative rounds natively over (B,) problems."""
+    lo0 = jnp.asarray(lo0)
+    hi0 = jnp.asarray(hi0, dtype=lo0.dtype)
+    if sign_lo is None:
+        sign_lo = sign_bit(multi_eval(lo0[:, None])[:, 0])
+
+    def round_body(_, carry):
+        lo, hi, sl = carry
+        grid = _midpoint_tree(lo, hi, spec_k)            # (B, 2**k + 1)
+        signs = sign_bit(multi_eval(grid[:, 1:-1]))      # (B, 2**k - 1)
+        li, hi_i, new_sl = _select_walk(signs, sl, spec_k)
+        new_lo = jnp.take_along_axis(grid, li[:, None], axis=1)[:, 0]
+        new_hi = jnp.take_along_axis(grid, hi_i[:, None], axis=1)[:, 0]
+        return new_lo, new_hi, new_sl
+
+    lo, hi, _ = jax.lax.fori_loop(0, rounds, round_body, (lo0, hi0, sign_lo))
+    return lo, hi
+
+
+def solve(
+    problem: MonotoneProblem, *, rounds: int, spec_k: int
+) -> tuple[Array, Array]:
+    """Solve a batch of monotone problems: final (lo, hi) brackets, (B,) each.
+
+    ``rounds * spec_k`` serial-equivalent bisection steps per row (paper
+    §IV.B).  If the problem carries a ``fused_solve`` whole-solve kernel it
+    is preferred; a None return falls through to the generic loop.
+    """
+    if problem.fused_solve is not None:
+        out = problem.fused_solve(rounds=rounds, spec_k=spec_k)
+        if out is not None:
+            return out
+    return _solve_rounds(
+        problem.multi_eval,
+        problem.lo0,
+        problem.hi0,
+        rounds=rounds,
+        spec_k=spec_k,
+        sign_lo=problem.sign_lo,
+        sign_bit=problem.sign_bit,
+    )
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+# (kind, backend) -> factory(operand, **params) -> MonotoneProblem
+_REGISTRY: dict[tuple[str, str], Callable[..., MonotoneProblem]] = {}
+
+# Backends whose factories live outside core/ register themselves on first
+# use (keeps core free of kernel imports; kernels import core, never the
+# reverse at module scope).
+_LAZY_BACKEND_MODULES = {"pallas": "repro.kernels.solver_backends"}
+
+
+def register(kind: str, backend: str):
+    """Decorator: register a problem factory for (kind, backend)."""
+
+    def deco(factory: Callable[..., MonotoneProblem]):
+        _REGISTRY[(kind, backend)] = factory
+        return factory
+
+    return deco
+
+
+def problem(
+    kind: str, operand: Array, *, backend: str = "jnp", **params
+) -> MonotoneProblem:
+    """Build the MonotoneProblem for `kind` on `operand` via `backend`."""
+    module = _LAZY_BACKEND_MODULES.get(backend)
+    if module is not None:
+        importlib.import_module(module)
+    try:
+        factory = _REGISTRY[(kind, backend)]
+    except KeyError:
+        raise KeyError(
+            f"no solver backend {backend!r} for kind {kind!r}; "
+            f"registered: {sorted(_REGISTRY)}"
+        ) from None
+    return factory(operand, **params)
+
+
+def solve_kind(
+    kind: str,
+    operand: Array,
+    *,
+    backend: str = "jnp",
+    rounds: int,
+    spec_k: int,
+    **params,
+) -> tuple[Array, Array]:
+    """problem() + solve() in one call — the applications' entry point."""
+    return solve(
+        problem(kind, operand, backend=backend, **params),
+        rounds=rounds,
+        spec_k=spec_k,
+    )
+
+
+def kinds() -> list[str]:
+    return sorted({k for k, _ in _REGISTRY})
+
+
+def backends_for(kind: str) -> list[str]:
+    for module in _LAZY_BACKEND_MODULES.values():
+        importlib.import_module(module)
+    return sorted(b for k, b in _REGISTRY if k == kind)
+
+
+# ---------------------------------------------------------------------------
+# "jnp" oracle backends — broadcast-compare-reduce, always available
+# ---------------------------------------------------------------------------
+
+def _known_negative_sign_lo(batch: int, known: bool) -> Array | None:
+    """sign bit of f(lo0) when it is statically known to be negative —
+    skips the engine's M=1 probe pass (one whole operand sweep)."""
+    return jnp.ones((batch,), bool) if known else None
+
+
+@register("count_above", "jnp")
+def _count_above_jnp(operand: Array, *, k) -> MonotoneProblem:
+    """f(tau) = k - #{v : row[v] > tau}; monotone non-decreasing in tau.
+
+    Counts are small integers — exact in f32 under ANY summation order — so
+    this oracle is bit-identical to the tiled Pallas backend.
+    """
+    x = operand.astype(jnp.float32)
+    lo0 = jnp.min(x, axis=-1) - 1.0
+    hi0 = jnp.max(x, axis=-1) + 1.0
+
+    def multi_eval(taus: Array) -> Array:
+        counts = jnp.sum(x[:, None, :] > taus[:, :, None], axis=-1)
+        return jnp.float32(k) - counts.astype(jnp.float32)
+
+    # f(lo0) = k - V: negative whenever k < V (the non-degenerate case).
+    sign_lo = _known_negative_sign_lo(
+        x.shape[0], isinstance(k, int) and k < x.shape[-1]
+    )
+    return MonotoneProblem(multi_eval, lo0, hi0, sign_lo=sign_lo)
+
+
+@register("mass_at_or_above", "jnp")
+def _mass_jnp(operand: Array, *, p) -> MonotoneProblem:
+    """f(tau) = p - sum(row[v] where row[v] >= tau); non-decreasing."""
+    probs = operand
+    lo0 = jnp.zeros(probs.shape[:-1], probs.dtype)
+    hi0 = jnp.max(probs, axis=-1) + jnp.asarray(1e-6, probs.dtype)
+
+    def multi_eval(taus: Array) -> Array:
+        keep = probs[:, None, :] >= taus[:, :, None]
+        mass = jnp.sum(jnp.where(keep, probs[:, None, :], 0.0), axis=-1)
+        return jnp.asarray(p, probs.dtype) - mass
+
+    return MonotoneProblem(multi_eval, lo0, hi0)
+
+
+@register("entropy_at_temperature", "jnp")
+def _entropy_jnp(
+    operand: Array, *, target, t_lo: float = 0.05, t_hi: float = 20.0
+) -> MonotoneProblem:
+    """f(T) = target - H(softmax(row / T)); H increasing in T."""
+    z = operand.astype(jnp.float32)
+    batch = z.shape[0]
+    lo0 = jnp.full((batch,), t_lo, jnp.float32)
+    hi0 = jnp.full((batch,), t_hi, jnp.float32)
+
+    def multi_eval(ts: Array) -> Array:
+        zt = z[:, None, :] / ts[:, :, None]                 # (B, M, V)
+        lse = jax.nn.logsumexp(zt, axis=-1, keepdims=True)
+        logp = zt - lse
+        h = -jnp.sum(jnp.exp(logp) * logp, axis=-1)          # (B, M)
+        return jnp.asarray(target, jnp.float32) - h
+
+    return MonotoneProblem(multi_eval, lo0, hi0)
+
+
+@register("count_below", "jnp")
+def _count_below_jnp(operand: Array, *, q) -> MonotoneProblem:
+    """f(c) = #{v : row[v] < c} / N - q; non-decreasing (quantile solve)."""
+    x = operand.astype(jnp.float32)
+    n = x.shape[-1]
+    lo0 = jnp.min(x, axis=-1) - 1.0
+    hi0 = jnp.max(x, axis=-1) + 1.0
+
+    def multi_eval(cs: Array) -> Array:
+        below = jnp.sum(x[:, None, :] < cs[:, :, None], axis=-1)
+        return below.astype(jnp.float32) / n - jnp.asarray(q, jnp.float32)
+
+    # f(lo0) = 0/N - q: negative for any positive static q.
+    sign_lo = _known_negative_sign_lo(
+        x.shape[0], isinstance(q, float) and q > 0
+    )
+    return MonotoneProblem(multi_eval, lo0, hi0, sign_lo=sign_lo)

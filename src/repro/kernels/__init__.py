@@ -4,9 +4,14 @@ Each kernel module pairs with a pure-jnp oracle in ``ref.py``; ``ops.py``
 holds the public jit'd wrappers (interpret-mode on non-TPU backends).
 
   multi_count.py         one-round multi-threshold count over tiled vocab
+  multi_mass.py          one-round multi-threshold probability mass (top-p)
+  multi_entropy.py       one-round multi-temperature softmax entropy
   runahead_threshold.py  FUSED multi-round runahead top-k solve (VMEM rows)
   taylor_eval.py         speculative-grid Taylor eval (paper case study)
   flash_fwd.py           flash-attention forward (VMEM score tiles, §Perf B4)
+
+``solver_backends.py`` registers these as the "pallas" backend of the
+batched solve engine (repro.core.solver) — loaded lazily on first use.
 """
 from repro.kernels import ops, ref
 

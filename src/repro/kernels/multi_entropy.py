@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: softmax entropy at MANY temperatures, tiled vocab.
+
+The entropy-calibrated-temperature solve's "function evaluation" is
+``H(softmax(z / T))`` — one pass over the vocab per candidate T.  Runahead
+bisection asks for H at 2**k - 1 candidate temperatures per round; this
+kernel answers ALL candidates for ALL batch rows in one tiled sweep.
+
+Entropy needs two coupled reductions per candidate (a normaliser and an
+expectation), so the kernel accumulates the pair
+
+  s[m] = sum_v exp(z_v / T_m)            (normaliser)
+  w[m] = sum_v (z_v / T_m) exp(z_v / T_m)
+
+across vocab tiles into a revisited (1, 2, M_pad) output block; the wrapper
+finalises ``H = log(s) - w / s``.  The row max is subtracted up front (in
+the wrapper), which makes every exp argument <= 0 — no overflow, no online
+max-rescaling needed, and H is shift-invariant so the result is exact.
+
+Padding: vocab lanes are padded with a -1e30 sentinel: exp underflows to
+exactly 0 and the w-contribution is 0 * finite = 0, for ANY candidate
+temperature in the bracket.  Padded candidate lanes get T = 1 (harmless;
+discarded by the wrapper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_V = 2048   # vocab tile per grid step
+LANE = 128       # TPU lane width; candidate dim padded to a multiple
+
+_PAD_SENTINEL = -1e30
+
+
+def _kernel(z_ref, ts_ref, out_ref):
+    v_step = pl.program_id(1)
+
+    @pl.when(v_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    z = z_ref[...]                                # (1, BLOCK_V), max-shifted
+    ts = ts_ref[...]                              # (1, M_pad)
+    zt = z[:, None, :] / ts[:, :, None]           # (1, M_pad, BLOCK_V)
+    e = jnp.exp(zt)
+    s = jnp.sum(e, axis=-1)                       # (1, M_pad)
+    w = jnp.sum(zt * e, axis=-1)                  # (1, M_pad)
+    out_ref[...] += jnp.concatenate(
+        [s[:, None, :], w[:, None, :]], axis=1
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def multi_entropy(
+    logits: jax.Array, ts: jax.Array, *, interpret: bool = False
+):
+    """H[b, m] = entropy of softmax(logits[b] / ts[b, m]).
+
+    logits: (B, V) float32;  ts: (B, M) float32 (positive)  ->  (B, M) f32.
+    """
+    B, V = logits.shape
+    _, M = ts.shape
+    m_pad = -(-M // LANE) * LANE
+    v_pad = -(-V // BLOCK_V) * BLOCK_V
+    z = logits.astype(jnp.float32)
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    z_p = jnp.pad(z, ((0, 0), (0, v_pad - V)), constant_values=_PAD_SENTINEL)
+    ts_p = jnp.pad(ts, ((0, 0), (0, m_pad - M)), constant_values=1.0)
+
+    acc = pl.pallas_call(
+        _kernel,
+        grid=(B, v_pad // BLOCK_V),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_V), lambda b, v: (b, v)),
+            pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2, m_pad), lambda b, v: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 2, m_pad), jnp.float32),
+        interpret=interpret,
+    )(z_p, ts_p)
+    s = acc[:, 0, :M]
+    w = acc[:, 1, :M]
+    return jnp.log(s) - w / s

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: multi-threshold probability MASS over a tiled vocab.
+
+The nucleus (top-p) solve's "function evaluation" is
+``mass(probs >= tau) = sum of probs at or above tau`` — one pass over the
+vocab.  Runahead bisection asks for that mass at 2**k - 1 candidate
+thresholds per round; this kernel answers ALL candidates for ALL batch rows
+in a single tiled sweep, the mass-analogue of ``multi_count`` (same layout:
+grid = (B, V // BLOCK_V), logits tile streamed HBM -> VMEM, lane-padded
+candidate row resident, output block revisited/accumulated over vocab
+tiles).
+
+Padding: probs are padded with -1.0 (a probability can never be negative,
+so padded lanes are below every candidate threshold and contribute zero
+mass — including to the engine's bracket-sign probe at tau = 0).  Padded
+candidates get +inf thresholds -> zero mass, discarded by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_V = 2048   # vocab tile per grid step (f32: 8 KiB — deep in VMEM budget)
+LANE = 128       # TPU lane width; candidate dim padded to a multiple
+
+
+def _kernel(probs_ref, taus_ref, out_ref):
+    v_step = pl.program_id(1)
+
+    @pl.when(v_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    block = probs_ref[...]                        # (1, BLOCK_V)
+    taus = taus_ref[...]                          # (1, M_pad)
+    keep = block[:, None, :] >= taus[:, :, None]  # (1, M_pad, BLOCK_V)
+    out_ref[...] += jnp.sum(
+        jnp.where(keep, block[:, None, :], 0.0), axis=-1
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def multi_mass(probs: jax.Array, taus: jax.Array, *, interpret: bool = False):
+    """mass[b, m] = sum of probs[b, v] where probs[b, v] >= taus[b, m].
+
+    probs: (B, V) float32;  taus: (B, M) float32  ->  (B, M) float32.
+    """
+    B, V = probs.shape
+    _, M = taus.shape
+    m_pad = -(-M // LANE) * LANE
+    v_pad = -(-V // BLOCK_V) * BLOCK_V
+    probs_p = jnp.pad(probs, ((0, 0), (0, v_pad - V)), constant_values=-1.0)
+    taus_p = jnp.pad(taus, ((0, 0), (0, m_pad - M)), constant_values=jnp.inf)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(B, v_pad // BLOCK_V),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_V), lambda b, v: (b, v)),
+            pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m_pad), jnp.float32),
+        interpret=interpret,
+    )(probs_p, taus_p)
+    return out[:, :M]

@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import multi_count as _mc
+from repro.kernels import multi_entropy as _me
+from repro.kernels import multi_mass as _mm
 from repro.kernels import runahead_threshold as _rt
 from repro.kernels import taylor_eval as _te
 
@@ -20,6 +22,16 @@ def _interpret() -> bool:
 def multi_count(logits: jax.Array, taus: jax.Array) -> jax.Array:
     """Fused multi-threshold count (one vocab sweep, all candidates)."""
     return _mc.multi_count(logits, taus, interpret=_interpret())
+
+
+def multi_mass(probs: jax.Array, taus: jax.Array) -> jax.Array:
+    """Fused multi-threshold probability mass (one vocab sweep)."""
+    return _mm.multi_mass(probs, taus, interpret=_interpret())
+
+
+def multi_entropy(logits: jax.Array, ts: jax.Array) -> jax.Array:
+    """Fused multi-temperature softmax entropy (one vocab sweep)."""
+    return _me.multi_entropy(logits, ts, interpret=_interpret())
 
 
 def runahead_topk_threshold(

@@ -15,6 +15,20 @@ def multi_count_ref(logits: jax.Array, taus: jax.Array) -> jax.Array:
     ).astype(jnp.float32)
 
 
+def multi_mass_ref(probs: jax.Array, taus: jax.Array) -> jax.Array:
+    """mass[b, m] = sum of probs[b, v] where probs[b, v] >= taus[b, m]."""
+    keep = probs[:, None, :] >= taus[:, :, None]
+    return jnp.sum(jnp.where(keep, probs[:, None, :], 0.0), axis=-1)
+
+
+def multi_entropy_ref(logits: jax.Array, ts: jax.Array) -> jax.Array:
+    """H[b, m] = entropy of softmax(logits[b] / ts[b, m])."""
+    zt = logits.astype(jnp.float32)[:, None, :] / ts[:, :, None]
+    lse = jax.nn.logsumexp(zt, axis=-1, keepdims=True)
+    logp = zt - lse
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
 def runahead_topk_threshold_ref(
     logits: jax.Array, *, k_target: int, rounds: int = 8, spec_k: int = 5
 ) -> tuple[jax.Array, jax.Array]:

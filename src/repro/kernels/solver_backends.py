@@ -1,0 +1,101 @@
+"""Pallas backend registrations for the batched solver engine (DESIGN.md §4).
+
+Imported lazily by ``repro.core.solver`` the first time a problem asks for
+``backend="pallas"`` — core never imports kernels at module scope, so the
+dependency arrow stays kernels -> core.
+
+Each factory BUILDS the "jnp" oracle's problem and swaps only the
+evaluator (``dataclasses.replace``): bracket init, sign semantics, and
+the known-sign fast path are inherited from the oracle by construction,
+so the two backends cannot drift apart.
+
+  count_above             -> ops.multi_count        (counts: BIT-exact
+                             vs jnp — integer sums are order-invariant)
+                             + whole-solve override ops.runahead_topk_threshold
+                             (VMEM-resident rows across ALL rounds) when the
+                             target count is static
+  mass_at_or_above        -> ops.multi_mass         (float sums: allclose)
+  entropy_at_temperature  -> ops.multi_entropy      (float sums: allclose)
+  count_below             -> ops.multi_count on the NEGATED operand:
+                             #{x < c} == #{-x > -c} exactly, so the
+                             quantile solve is bit-exact vs jnp too
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import solver
+from repro.core.solver import MonotoneProblem, register
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+def _from_jnp(kind: str, operand: Array, **params) -> MonotoneProblem:
+    """The oracle problem for `kind` — evaluator to be replaced."""
+    return solver.problem(kind, operand, backend="jnp", **params)
+
+
+@register("count_above", "pallas")
+def _count_above_pallas(operand: Array, *, k) -> MonotoneProblem:
+    x = operand.astype(jnp.float32)
+
+    def multi_eval(taus: Array) -> Array:
+        return jnp.float32(k) - ops.multi_count(x, taus)
+
+    fused = None
+    if isinstance(k, int):
+        # static target count -> the fully fused multi-round kernel applies
+        # (one HBM pass total; DESIGN.md §2.1).  Bit-identical trajectory.
+        def fused(*, rounds: int, spec_k: int):
+            return ops.runahead_topk_threshold(
+                x, k_target=k, rounds=rounds, spec_k=spec_k
+            )
+
+    return dataclasses.replace(
+        _from_jnp("count_above", operand, k=k),
+        multi_eval=multi_eval, fused_solve=fused,
+    )
+
+
+@register("mass_at_or_above", "pallas")
+def _mass_pallas(operand: Array, *, p) -> MonotoneProblem:
+    probs = operand.astype(jnp.float32)
+
+    def multi_eval(taus: Array) -> Array:
+        return jnp.asarray(p, probs.dtype) - ops.multi_mass(probs, taus)
+
+    return dataclasses.replace(
+        _from_jnp("mass_at_or_above", probs, p=p), multi_eval=multi_eval
+    )
+
+
+@register("entropy_at_temperature", "pallas")
+def _entropy_pallas(operand: Array, *, target, **bracket) -> MonotoneProblem:
+    z = operand.astype(jnp.float32)
+
+    def multi_eval(ts: Array) -> Array:
+        return jnp.asarray(target, jnp.float32) - ops.multi_entropy(z, ts)
+
+    return dataclasses.replace(
+        _from_jnp("entropy_at_temperature", z, target=target, **bracket),
+        multi_eval=multi_eval,
+    )
+
+
+@register("count_below", "pallas")
+def _count_below_pallas(operand: Array, *, q) -> MonotoneProblem:
+    x = operand.astype(jnp.float32)
+    n = x.shape[-1]
+    neg_x = -x
+
+    def multi_eval(cs: Array) -> Array:
+        below = ops.multi_count(neg_x, -cs)      # #{x < c} == #{-x > -c}
+        return below / n - jnp.asarray(q, jnp.float32)
+
+    return dataclasses.replace(
+        _from_jnp("count_below", operand, q=q), multi_eval=multi_eval
+    )

@@ -6,15 +6,23 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh across jax versions: `axis_types` (and AxisType) only
+    exist in newer jax; older versions default to Auto semantics anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(
+        shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+    )
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """Single pod: 16x16 = 256 chips (data, model).
     Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def data_axes(mesh: jax.sharding.Mesh):

@@ -125,6 +125,14 @@ def main(argv=None):
         if mgr is not None and (step + 1) % args.ckpt_every == 0:
             mgr.save_async(step + 1, {"params": params, "opt": opt_state})
         if args.die_at_step is not None and step == args.die_at_step:
+            # Simulate a crash BETWEEN checkpoint windows: drain the async
+            # writer first, else the reduced-config steps (~ms each) race a
+            # multi-second write and os._exit kills the daemon thread with
+            # only tmp.<step> on disk.  Real steps are slower than the
+            # writer; a mid-write crash is separately covered by the
+            # atomic-rename design (tmp dirs are never restored from).
+            if mgr is not None:
+                mgr.wait()
             log.error("fault injection: dying at step %d", step)
             import os
 

@@ -10,8 +10,11 @@ Capacity enforcement — TWO modes, the second is the paper's technique:
                cumsum of the assignment one-hot), tokens past capacity drop.
   * "bisect" — **runahead bisection** (repro.core): per expert, solve the
                gate-score threshold tau_e with count(score > tau_e) <= Cap
-               via speculative bisection (vmapped over experts), then keep
-               the HIGHEST-scoring tokens.  Replaces the quality-blind FIFO
+               via the BATCHED speculative-bisection engine (experts ride
+               the engine's native batch axis — one fused pass over the
+               assignment dim answers every candidate for every expert),
+               then keep the HIGHEST-scoring tokens.  Replaces the
+               quality-blind FIFO
                drop (and the O(T log T) sort a priority drop would normally
                need) with O(rounds) fused counting passes — the paper's
                O(n) -> O(n/k) round reduction applied to the router.
@@ -28,7 +31,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.runahead import runahead_solve
+from repro.core.applications import capacity_threshold
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init
@@ -72,37 +75,29 @@ def _capacity(tokens: int, n_experts: int, top_k: int, factor: float) -> int:
 
 
 def _bisect_keep(scores: jax.Array, expert_id: jax.Array, e_pad: int,
-                 cap: int) -> jax.Array:
+                 cap: int, backend: str = "jnp") -> jax.Array:
     """Paper technique: per-expert gate threshold via runahead bisection.
 
     scores: (A,) assignment gate values in (0, 1]; expert_id: (A,) int32.
     Returns keep: (A,) bool with at most `cap` keepers per expert (the
-    top-scoring ones).  One multi_eval = one pass over the assignment dim
-    counting all 2**k - 1 candidate thresholds at once.
+    top-scoring ones).  The (E, A) masked score matrix rides the solver
+    engine's native batch axis — one multi_eval = one fused pass over the
+    assignment dim answering all 2**k - 1 candidate thresholds for ALL
+    experts at once (no vmap of a scalar solve).
     """
-
-    def solve_expert(e):
-        mine = expert_id == e
-        masked = jnp.where(mine, scores, -1.0)
-
-        def multi_eval(taus):
-            counts = jnp.sum(masked[None, :] > taus[:, None], axis=-1)
-            return jnp.float32(cap) - counts.astype(jnp.float32)
-
-        lo, hi = runahead_solve(
-            multi_eval, jnp.float32(-1.5), jnp.float32(1.5),
-            rounds=6, spec_k=5,
-        )
-        # under-capacity experts have no root in the bracket (count never
-        # reaches cap): keep everything by thresholding below all gates.
-        demand = jnp.sum(mine)
-        return jnp.where(demand <= cap, jnp.float32(-1.0), hi)
-
-    taus = jax.vmap(solve_expert)(jnp.arange(e_pad))         # (E,)
+    mine = expert_id[None, :] == jnp.arange(e_pad)[:, None]   # (E, A)
+    masked = jnp.where(mine, scores[None, :], -1.0)
+    taus = capacity_threshold(masked, cap, rounds=6, spec_k=5,
+                              backend=backend)                # (E,)
+    # under-capacity experts may have no count == cap crossing inside the
+    # score range: keep everything by thresholding below all gates.
+    demand = jnp.sum(mine, axis=-1)
+    taus = jnp.where(demand <= cap, jnp.float32(-1.0), taus)
     return scores > taus[expert_id]
 
 
-def _dispatch_group(p, cfg, xt, cap: int, capacity_mode: str):
+def _dispatch_group(p, cfg, xt, cap: int, capacity_mode: str,
+                    solver_backend: str = "jnp"):
     """Route ONE token group (T_g, D) into expert slots (GShard grouping:
     a group = a data shard, so capacity and the scatter are group-local and
     GSPMD keeps the group batch dim sharded over `data`).
@@ -129,7 +124,7 @@ def _dispatch_group(p, cfg, xt, cap: int, capacity_mode: str):
     a_token = jnp.repeat(jnp.arange(T), k)
 
     if capacity_mode == "bisect":
-        keep = _bisect_keep(a_gate, a_expert, e_pad, cap)
+        keep = _bisect_keep(a_gate, a_expert, e_pad, cap, solver_backend)
     elif capacity_mode == "fifo":
         keep = jnp.ones_like(a_gate, dtype=bool)
     else:
@@ -173,6 +168,7 @@ def moe_apply(
     *,
     capacity_mode: str = "fifo",   # "fifo" | "bisect"
     n_groups: int = 1,             # GShard groups (= data-parallel shards)
+    solver_backend: str = "jnp",   # engine backend for "bisect" thresholds
 ) -> tuple[jax.Array, MoEStats]:
     B, S, D = x.shape
     T = B * S
@@ -186,7 +182,8 @@ def moe_apply(
     xg = x.reshape(n_groups, tg, D)
 
     expert_in, slot, keep, a_gate, a_token, aux, dropped = jax.vmap(
-        lambda xt: _dispatch_group(p, cfg, xt, cap, capacity_mode)
+        lambda xt: _dispatch_group(p, cfg, xt, cap, capacity_mode,
+                                   solver_backend)
     )(xg)
     # (G, E, cap, D): groups over data, experts over model — EP einsums.
     expert_in = shard(expert_in, "batch", "expert", None, None)

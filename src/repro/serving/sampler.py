@@ -1,17 +1,24 @@
 """Token sampler built on runahead bisection (the paper's technique as a
 first-class serving feature — DESIGN.md §3).
 
-Every monotone solve in the sampling pipeline goes through speculative
-bisection instead of a vocab sort:
+Every monotone solve in the sampling pipeline goes through the BATCHED
+speculative-bisection engine (repro.core.solver) instead of a vocab sort:
 
-  top-k        count(logits > tau) = k          (fused Pallas kernel path)
+  top-k        count(logits > tau) = k
   top-p        mass(probs >= tau) = p
   temperature  H(softmax(z/T)) = H_target       (entropy-calibrated)
 
 A 152k-vocab sort is O(V log V) with poor TPU characteristics; the
-runahead solve is `rounds` fused counting passes (rounds = ceil(steps/k)),
-each answering 2**spec_k - 1 candidates at once — and the Pallas path keeps
-the logits row VMEM-resident across ALL rounds (one HBM pass total).
+runahead solve is `rounds` fused passes (rounds = ceil(steps/k)), each
+answering 2**spec_k - 1 candidates for EVERY batch row at once.
+
+``SamplerConfig.backend`` selects the engine backend uniformly for all
+three solves (DESIGN.md §4): "jnp" is the broadcast-compare-reduce oracle;
+"pallas" routes every evaluation through fused VMEM-tiled kernels — and
+top-k additionally through the fully fused multi-round kernel that keeps
+each logits row VMEM-resident across ALL rounds (one HBM pass total).
+This module holds NO solve logic of its own: it only phrases sampling as
+engine problems via repro.core.applications.
 """
 from __future__ import annotations
 
@@ -22,10 +29,9 @@ import jax.numpy as jnp
 
 from repro.core.applications import (
     entropy_temperature,
-    topk_threshold,
-    topp_threshold,
+    topk_mask,
+    topp_mask,
 )
-from repro.kernels import ops as kernel_ops
 
 NEG_INF = -1e30
 
@@ -38,31 +44,7 @@ class SamplerConfig:
     top_p: float = 0.0                    # 0 = off
     spec_k: int = 5                       # speculation depth (paper's k)
     rounds: int = 8
-    backend: str = "jnp"                  # "jnp" | "pallas"
-
-
-def _topk_mask(logits: jax.Array, k: int, sc: SamplerConfig) -> jax.Array:
-    """(B, V) bool mask of the top-k logits per row."""
-    if sc.backend == "pallas":
-        lo, hi = kernel_ops.runahead_topk_threshold(
-            logits, k_target=k, rounds=sc.rounds, spec_k=sc.spec_k
-        )
-        return logits > hi[:, None]
-    solve = jax.vmap(
-        lambda row: topk_threshold(row, k, spec_k=sc.spec_k,
-                                   rounds=sc.rounds)
-    )
-    lo, hi = solve(logits)
-    return logits > hi[:, None]
-
-
-def _topp_mask(probs: jax.Array, p: float, sc: SamplerConfig) -> jax.Array:
-    solve = jax.vmap(
-        lambda row: topp_threshold(row, p, spec_k=sc.spec_k,
-                                   rounds=sc.rounds)
-    )
-    lo, hi = solve(probs)
-    return probs >= lo[:, None]
+    backend: str = "jnp"                  # "jnp" | "pallas" — ALL solves
 
 
 def sample(
@@ -77,21 +59,19 @@ def sample(
     # wide.  exp(-80) is ~1.8e-35 — numerically zero relative to the max in
     # f32 — so clamping at max-80 is exact for softmax/top-k purposes.
     z = jnp.maximum(z, jnp.max(z, axis=-1, keepdims=True) - 80.0)
+    kw = dict(spec_k=sc.spec_k, rounds=sc.rounds, backend=sc.backend)
 
     if sc.target_entropy is not None:
-        t = jax.vmap(
-            lambda row: entropy_temperature(row, sc.target_entropy,
-                                            spec_k=sc.spec_k)
-        )(z)
+        t = entropy_temperature(z, sc.target_entropy, **kw)
         z = z / t[:, None]
     elif sc.temperature != 1.0:
         z = z / sc.temperature
 
     if sc.top_k > 0:
-        z = jnp.where(_topk_mask(z, sc.top_k, sc), z, NEG_INF)
+        z = jnp.where(topk_mask(z, sc.top_k, **kw), z, NEG_INF)
     if sc.top_p > 0.0:
         probs = jax.nn.softmax(z, axis=-1)
-        z = jnp.where(_topp_mask(probs, sc.top_p, sc), z, NEG_INF)
+        z = jnp.where(topp_mask(probs, sc.top_p, **kw), z, NEG_INF)
 
     return jax.random.categorical(key, z, axis=-1).astype(jnp.int32)
 

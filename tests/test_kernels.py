@@ -35,6 +35,55 @@ def test_multi_count_dtypes(dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("B", [1, 3])
+@pytest.mark.parametrize("V", [100, 2048, 5000])
+@pytest.mark.parametrize("M", [1, 15, 31])
+def test_multi_mass_shapes(B, V, M):
+    from repro.kernels.multi_mass import multi_mass
+
+    rng = np.random.default_rng(B * V + M + 1)
+    probs = jax.nn.softmax(
+        jnp.asarray(rng.normal(size=(B, V)).astype(np.float32)) * 2, axis=-1
+    )
+    taus = jnp.asarray(
+        rng.uniform(0, 2.0 / V, size=(B, M)).astype(np.float32)
+    )
+    got = multi_mass(probs, taus, interpret=True)
+    want = ref.multi_mass_ref(probs, taus)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B", [1, 3])
+@pytest.mark.parametrize("V", [100, 2048, 5000])
+@pytest.mark.parametrize("M", [1, 15, 31])
+def test_multi_entropy_shapes(B, V, M):
+    from repro.kernels.multi_entropy import multi_entropy
+
+    rng = np.random.default_rng(B * V + M + 2)
+    logits = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32)) * 3
+    ts = jnp.asarray(
+        rng.uniform(0.05, 20.0, size=(B, M)).astype(np.float32)
+    )
+    got = multi_entropy(logits, ts, interpret=True)
+    want = ref.multi_entropy_ref(logits, ts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_multi_entropy_extreme_logit_range():
+    """Padded/clamped logits (-80 below max) must not produce NaN/inf."""
+    from repro.kernels.multi_entropy import multi_entropy
+
+    z = jnp.asarray([[0.0, -80.0, 5.0, -80.0] * 64], jnp.float32)
+    ts = jnp.asarray([[0.05, 1.0, 20.0]], jnp.float32)
+    got = multi_entropy(z, ts, interpret=True)
+    want = ref.multi_entropy_ref(z, ts)
+    assert bool(jnp.isfinite(got).all())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
 @pytest.mark.parametrize("V,k", [(1000, 5), (5000, 50), (18992, 64)])
 @pytest.mark.parametrize("spec_k", [3, 5])
 def test_fused_runahead_matches_unfused(V, k, spec_k):

@@ -45,6 +45,40 @@ def test_pallas_backend_matches_jnp():
     np.testing.assert_array_equal(np.asarray(t_j), np.asarray(t_p))
 
 
+def test_backend_honored_for_topp():
+    """SamplerConfig.backend applies to top-p too (it used to be silently
+    ignored outside top-k): the pallas solve restricts support to the SAME
+    nucleus the sort-based reference defines.  (Token-level equality with
+    the jnp backend is deliberately not asserted: mass sums differ by ulps
+    between tiled and global reductions, which may legitimately flip a
+    boundary atom on other accumulation orders, e.g. compiled TPU.)"""
+    z = logits_batch(seed=1)
+    sc = SamplerConfig(top_p=0.5, backend="pallas")
+    keys = jax.random.split(jax.random.PRNGKey(1), 200)
+    toks = jax.vmap(lambda k: sample(z, k, sc))(keys)
+    for b in range(z.shape[0]):
+        p = jax.nn.softmax(z[b])
+        order = np.argsort(np.asarray(p))[::-1]
+        cum = np.cumsum(np.asarray(p)[order])
+        nucleus = set(order[: int(np.searchsorted(cum, 0.5) + 1)].tolist())
+        assert set(np.asarray(toks[:, b]).tolist()) <= nucleus
+
+
+def test_backend_honored_for_entropy_temperature():
+    """Both backends solve the SAME calibration: the temperature the pallas
+    path applies hits the entropy target (float-tolerance, not bit-exact)."""
+    from repro.core.applications import entropy_temperature
+
+    z = logits_batch(seed=3)
+    t_j = entropy_temperature(z, 2.5, backend="jnp")
+    t_p = entropy_temperature(z, 2.5, backend="pallas")
+    np.testing.assert_allclose(np.asarray(t_j), np.asarray(t_p),
+                               rtol=1e-3, atol=1e-3)
+    lp = jax.nn.log_softmax(z / np.asarray(t_p)[:, None], axis=-1)
+    h = -(jnp.exp(lp) * lp).sum(-1)
+    np.testing.assert_allclose(np.asarray(h), 2.5, atol=0.05)
+
+
 def test_entropy_calibration():
     z = logits_batch(seed=4)
     sc = SamplerConfig(target_entropy=2.5)

@@ -1,0 +1,233 @@
+"""Batched runahead solver engine (repro.core.solver): per-row trajectory
+bit-exactness vs serial sign-bit bisection, backend registry semantics,
+jnp/pallas solve parity, and a SamplerConfig backend round-trip through the
+serving engine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import solver
+from repro.core.applications import (
+    capacity_threshold,
+    entropy_temperature,
+    quantile,
+    topk_threshold,
+    topp_mask,
+    topp_threshold,
+)
+from repro.core.bisect import find_root_serial
+from repro.core.runahead import runahead_solve
+
+
+def _logits(B=4, V=600, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(B, V)).astype(np.float32) * scale)
+
+
+class TestBatchedWalkBitExact:
+    """The engine's (B,)-native walk must be trajectory-IDENTICAL to serial
+    sign-bit bisection run independently per row — exact float equality."""
+
+    def _serial_bracket(self, row, k_target, iters):
+        """Serial Algorithm-1 bracket in f32 numpy (mode='signbit')."""
+        a = np.float32(np.min(row) - 1.0)
+        b = np.float32(np.max(row) + 1.0)
+        f = lambda t: np.float32(k_target) - np.float32((row > t).sum())
+        fa = f(a)
+        for _ in range(iters):
+            mid = np.float32((a + b) / 2)
+            fm = f(mid)
+            if (fa < 0) != (fm < 0):
+                b = mid
+            else:
+                a, fa = mid, fm
+        return a, b
+
+    @pytest.mark.parametrize("spec_k,rounds", [(1, 12), (3, 5), (5, 4)])
+    def test_bracket_matches_serial_per_row(self, spec_k, rounds):
+        z = _logits(B=5, V=400, seed=1)
+        lo, hi = topk_threshold(z, 7, spec_k=spec_k, rounds=rounds)
+        for b in range(z.shape[0]):
+            a_s, b_s = self._serial_bracket(
+                np.asarray(z[b]), 7, rounds * spec_k
+            )
+            assert float(lo[b]) == float(a_s), (spec_k, rounds, b)
+            assert float(hi[b]) == float(b_s), (spec_k, rounds, b)
+
+    def test_last_serial_midpoint_is_a_bracket_endpoint(self):
+        """find_root_serial returns the last midpoint examined; after the
+        final step that midpoint IS one of the bracket endpoints."""
+        z = _logits(B=3, V=300, seed=2)
+        rounds, spec_k = 6, 4
+        lo, hi = topk_threshold(z, 11, spec_k=spec_k, rounds=rounds)
+        for b in range(z.shape[0]):
+            row = z[b]
+            f = lambda t: jnp.float32(11) - jnp.sum(row > t).astype(
+                jnp.float32
+            )
+            root = find_root_serial(
+                f, jnp.min(row) - 1.0, jnp.max(row) + 1.0,
+                rounds * spec_k, mode="signbit",
+            )
+            assert float(root) in (float(lo[b]), float(hi[b]))
+
+    def test_engine_equals_scalar_runahead_solve(self):
+        """B=1 view: the scalar paper-facing API and the batched engine are
+        the same trajectory."""
+        z = _logits(B=6, V=500, seed=3)
+
+        def solve_row(row):
+            def me(taus):
+                c = jnp.sum(row[None, :] > taus[:, None], axis=-1)
+                return jnp.float32(9) - c.astype(jnp.float32)
+
+            return runahead_solve(
+                me, jnp.min(row) - 1.0, jnp.max(row) + 1.0,
+                rounds=6, spec_k=4,
+            )
+
+        lo_s, hi_s = jax.vmap(solve_row)(z)
+        lo_b, hi_b = topk_threshold(z, 9, spec_k=4, rounds=6)
+        np.testing.assert_array_equal(np.asarray(lo_s), np.asarray(lo_b))
+        np.testing.assert_array_equal(np.asarray(hi_s), np.asarray(hi_b))
+
+
+class TestRegistry:
+    def test_kinds_registered(self):
+        assert {"count_above", "mass_at_or_above", "entropy_at_temperature",
+                "count_below"} <= set(solver.kinds())
+
+    def test_backends_for_count_above(self):
+        assert solver.backends_for("count_above") == ["jnp", "pallas"]
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(KeyError, match="no solver backend"):
+            solver.problem("definitely_not_a_kind", jnp.zeros((1, 8)))
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(KeyError, match="no solver backend"):
+            solver.problem("count_above", jnp.zeros((1, 8)),
+                           backend="cuda", k=2)
+
+    def test_custom_problem_solves(self):
+        """A hand-built MonotoneProblem (no registry) drives the engine:
+        batched root of f(x) = x - target."""
+        target = jnp.asarray([0.25, 0.5, -1.0], jnp.float32)
+
+        def me(xs):
+            return xs - target[:, None]
+
+        prob = solver.MonotoneProblem(
+            me, jnp.full((3,), -4.0), jnp.full((3,), 4.0)
+        )
+        lo, hi = solver.solve(prob, rounds=10, spec_k=4)
+        np.testing.assert_allclose(np.asarray((lo + hi) / 2),
+                                   np.asarray(target), atol=1e-4)
+
+
+class TestBackendParity:
+    """jnp vs pallas through the full solve.  Count-based kinds are
+    bit-exact (integer sums are order-invariant); mass/entropy float."""
+
+    def test_topk_bitexact(self):
+        z = _logits(seed=4, scale=3.0)
+        lo_j, hi_j = topk_threshold(z, 25, backend="jnp")
+        lo_p, hi_p = topk_threshold(z, 25, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(lo_j), np.asarray(lo_p))
+        np.testing.assert_array_equal(np.asarray(hi_j), np.asarray(hi_p))
+
+    def test_quantile_bitexact(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=777).astype(np.float32))
+        assert float(quantile(x, 0.35, backend="jnp")) == float(
+            quantile(x, 0.35, backend="pallas")
+        )
+
+    def test_topp_mask_parity(self):
+        z = _logits(seed=6, scale=3.0)
+        probs = jax.nn.softmax(z, axis=-1)
+        lo_j, _ = topp_threshold(probs, 0.8, backend="jnp")
+        lo_p, _ = topp_threshold(probs, 0.8, backend="pallas")
+        np.testing.assert_allclose(np.asarray(lo_j), np.asarray(lo_p),
+                                   atol=1e-6)
+        # masks may legitimately differ only at atoms within float noise
+        # of the threshold (tiled vs global mass sums differ by ulps)
+        m_j = np.asarray(topp_mask(probs, 0.8, backend="jnp"))
+        m_p = np.asarray(topp_mask(probs, 0.8, backend="pallas"))
+        disagree = m_j != m_p
+        near = np.abs(np.asarray(probs) - np.asarray(lo_j)[:, None]) < 1e-6
+        assert not (disagree & ~near).any()
+
+    def test_entropy_temperature_parity(self):
+        z = _logits(seed=7, scale=3.0)
+        t_j = entropy_temperature(z, 2.5, backend="jnp")
+        t_p = entropy_temperature(z, 2.5, backend="pallas")
+        np.testing.assert_allclose(np.asarray(t_j), np.asarray(t_p),
+                                   atol=1e-3, rtol=1e-3)
+        # both calibrate: H(softmax(z/T)) == target
+        for t in (t_j, t_p):
+            lp = jax.nn.log_softmax(z / t[:, None], axis=-1)
+            h = -jnp.sum(jnp.exp(lp) * lp, axis=-1)
+            np.testing.assert_allclose(np.asarray(h), 2.5, atol=0.05)
+
+    def test_capacity_threshold_parity(self):
+        """Expert axis = engine batch axis; both backends bracket the cap."""
+        rng = np.random.default_rng(8)
+        scores = jnp.asarray(rng.uniform(0, 1, size=(6, 64)).astype(
+            np.float32))
+        tau_j = capacity_threshold(scores, 10, backend="jnp")
+        tau_p = capacity_threshold(scores, 10, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(tau_j), np.asarray(tau_p))
+        counts = (np.asarray(scores) > np.asarray(tau_j)[:, None]).sum(-1)
+        assert (counts <= 10).all()
+
+
+class TestSamplerBackendRoundTrip:
+    """SamplerConfig(backend=...) through serving/engine.py::generate."""
+
+    def _tiny(self):
+        from repro.models.testing import reduced_config
+        from repro.models.transformer import init_params
+
+        cfg = dataclasses.replace(
+            reduced_config("internlm2-1.8b"), n_layers=1, d_model=32,
+            n_heads=2, n_kv_heads=2, d_head=16, d_ff=64, vocab=128,
+        )
+        params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        return cfg, params
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_generate_full_pipeline(self, backend):
+        from repro.serving.engine import generate
+        from repro.serving.sampler import SamplerConfig
+
+        cfg, params = self._tiny()
+        prompt = jnp.asarray([[1, 2, 3, 4], [4, 3, 2, 1]], jnp.int32)
+        sc = SamplerConfig(top_k=16, top_p=0.9, target_entropy=2.0,
+                           backend=backend)
+        toks = generate(cfg, params, prompt, 3, jax.random.PRNGKey(1),
+                        sampler=sc)
+        assert toks.shape == (2, 3)
+        assert toks.dtype == jnp.int32
+        arr = np.asarray(toks)
+        assert (arr >= 0).all() and (arr < cfg.vocab).all()
+
+    def test_generate_topk_backends_agree(self):
+        """top-k is count-based -> the two backends produce bit-identical
+        masked logits, hence identical tokens for the same key."""
+        from repro.serving.engine import generate
+        from repro.serving.sampler import SamplerConfig
+
+        cfg, params = self._tiny()
+        prompt = jnp.asarray([[5, 6, 7, 8]], jnp.int32)
+        out = {}
+        for backend in ("jnp", "pallas"):
+            sc = SamplerConfig(top_k=12, backend=backend)
+            out[backend] = np.asarray(
+                generate(cfg, params, prompt, 4, jax.random.PRNGKey(2),
+                         sampler=sc)
+            )
+        np.testing.assert_array_equal(out["jnp"], out["pallas"])
