@@ -24,6 +24,7 @@ ALL = [
     "fig7_latency_gpu",
     "sampler_bench",
     "moe_capacity_bench",
+    "serving_bench",
 ]
 
 

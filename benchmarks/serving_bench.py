@@ -1,0 +1,199 @@
+"""Serving benchmark: one-shot static batching vs continuous batching.
+
+A fixed synthetic workload (heterogeneous n_new, all requests submitted at
+t=0) is served two ways on the same tiny dense model:
+
+  * ``oneshot``    — requests grouped into static batches of `n_slots`;
+    each group runs ``generate`` for the group's MAX n_new, so short
+    requests pad out the batch and every request waits for its whole
+    group (the pre-PR serving shape);
+  * ``continuous`` — the slot scheduler admits/evicts per decode step
+    (``serving.server.RunaheadServer``), so a finished request's lane is
+    immediately re-used by the queue.
+
+Per the harness convention each (mode, backend) cell runs twice and the
+second, jit-warm execution is reported.  Emits ``BENCH_serving.json``:
+throughput plus p50/p99 per-request latency for every cell, jnp AND
+pallas solver backends (pallas in interpret mode off-TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.models.testing import reduced_config
+from repro.models.transformer import init_params
+from repro.serving.engine import generate
+from repro.serving.sampler import SamplerConfig
+from repro.serving.server import Request, RunaheadServer
+
+N_REQUESTS = 10
+N_SLOTS = 4
+PROMPT_LEN = 16
+N_NEW_MIN, N_NEW_MAX = 4, 32     # heavy spread: the continuous-batching case
+CONTEXT = PROMPT_LEN + N_NEW_MAX
+TOP_K = 50
+VOCAB = 8192
+BACKENDS = ("jnp", "pallas")
+
+_PAYLOAD: dict | None = None
+
+
+def _model():
+    """Big enough that a decode step is COMPUTE, not launch overhead —
+    at toy sizes the one-shot engine's fused scan wins on dispatch alone
+    and the comparison measures nothing about scheduling."""
+    cfg = dataclasses.replace(
+        reduced_config("internlm2-1.8b"), n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=4, d_head=32, d_ff=512, vocab=VOCAB,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _requests(backend: str) -> list[Request]:
+    rng = np.random.default_rng(42)
+    sc = SamplerConfig(top_k=TOP_K, backend=backend)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, VOCAB, size=PROMPT_LEN).tolist(),
+            n_new=int(rng.integers(N_NEW_MIN, N_NEW_MAX + 1)),
+            seed=1000 + i,
+            sampler=sc,
+        )
+        for i in range(N_REQUESTS)
+    ]
+
+
+_oneshot_jit = jax.jit(
+    generate, static_argnames=("cfg", "n_new", "context", "sampler")
+)
+
+
+def _run_oneshot(cfg, params, reqs: list[Request]):
+    """Static batching: groups of N_SLOTS, one batched ``generate`` per
+    group decoded to the group's MAX n_new (one key per batch — the
+    engine's API).  Every request's latency is its whole group's.  The
+    engine is wrapped in jit so the comparison isolates the SCHEDULING
+    effect (padding + whole-group waits), not eager-dispatch overhead."""
+    t0 = time.perf_counter()
+    latency = {}
+    for g in range(0, len(reqs), N_SLOTS):
+        group = reqs[g:g + N_SLOTS]
+        prompts = jnp.asarray([r.prompt for r in group], jnp.int32)
+        n_new = max(r.n_new for r in group)
+        toks = _oneshot_jit(cfg, params, prompts, n_new,
+                            jax.random.PRNGKey(group[0].seed),
+                            context=CONTEXT, sampler=group[0].sampler)
+        jax.block_until_ready(toks)
+        now = time.perf_counter()
+        for r in group:
+            latency[r.rid] = now - t0
+    wall = time.perf_counter() - t0
+    useful = sum(r.n_new for r in reqs)      # over-decoded padding excluded
+    # row-tokens actually decoded: every row in a group rides to the
+    # group's max — the padding work continuous batching exists to avoid
+    # (a box-noise-free structural metric; CPU wall time is dispatch-bound
+    # at this scale)
+    row_tokens = sum(
+        len(reqs[g:g + N_SLOTS]) * max(r.n_new for r in reqs[g:g + N_SLOTS])
+        for g in range(0, len(reqs), N_SLOTS)
+    )
+    return wall, useful, latency, row_tokens
+
+
+def _run_continuous(cfg, params, reqs: list[Request], backend: str):
+    server = RunaheadServer(cfg, params, n_slots=N_SLOTS, context=CONTEXT,
+                            backend=backend)
+    t0 = time.perf_counter()
+    for r in reqs:
+        server.submit(r)
+    done = server.drain()
+    wall = time.perf_counter() - t0
+    latency = {c.rid: c.finish_time - c.arrival_time for c in done}
+    useful = sum(len(c.tokens) for c in done)
+    return wall, useful, latency, server.scheduler.n_decode_steps
+
+
+def _cell(mode, backend, wall, useful, latency, extra=None) -> dict:
+    lat = np.sort(np.asarray(list(latency.values())))
+    out = {
+        "mode": mode, "backend": backend,
+        "requests": len(latency), "useful_tokens": int(useful),
+        "wall_s": round(wall, 4),
+        "tok_per_s": round(useful / wall, 2),
+        "latency_p50_ms": round(1e3 * float(np.quantile(lat, 0.5)), 1),
+        "latency_p99_ms": round(1e3 * float(np.quantile(lat, 0.99)), 1),
+    }
+    if extra:
+        out.update(extra)
+    return out
+
+
+def run() -> list[str]:
+    global _PAYLOAD
+    out, results = [], []
+    cfg, params = _model()
+
+    for backend in BACKENDS:
+        reqs = _requests(backend)
+
+        cell = None
+        for _ in range(2):                       # report the warm pass
+            wall, useful, lat, row_tokens = _run_oneshot(cfg, params, reqs)
+            cell = _cell("oneshot", backend, wall, useful, lat,
+                         {"decoded_row_tokens": row_tokens})
+        results.append(cell)
+        out.append(row(
+            f"serving/oneshot_{backend}", 1e6 * cell["wall_s"],
+            f"tok_per_s={cell['tok_per_s']};"
+            f"p99_ms={cell['latency_p99_ms']}",
+        ))
+
+        for _ in range(2):
+            wall, useful, lat, steps = _run_continuous(
+                cfg, params, reqs, backend)
+            cell = _cell("continuous", backend, wall, useful, lat,
+                         {"decode_steps": steps,
+                          "decoded_row_tokens": steps * N_SLOTS})
+        results.append(cell)
+        out.append(row(
+            f"serving/continuous_{backend}", 1e6 * cell["wall_s"],
+            f"tok_per_s={cell['tok_per_s']};"
+            f"p99_ms={cell['latency_p99_ms']};decode_steps={steps}",
+        ))
+
+    _PAYLOAD = {
+        "bench": "serving",
+        "unit": "wall seconds per workload; per-request latency ms",
+        "config": {
+            "n_requests": N_REQUESTS, "n_slots": N_SLOTS,
+            "prompt_len": PROMPT_LEN,
+            "n_new_range": [N_NEW_MIN, N_NEW_MAX], "top_k": TOP_K,
+            "context": CONTEXT,
+            "device": jax.default_backend(),
+            "pallas_interpret": jax.default_backend() != "tpu",
+        },
+        "results": results,
+    }
+    return out
+
+
+def json_payload() -> tuple[str, dict] | None:
+    """(filename, payload) for run.py to write; None before run()."""
+    if _PAYLOAD is None:
+        return None
+    return "BENCH_serving.json", _PAYLOAD
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))
+    import json
+
+    print(json.dumps(_PAYLOAD, indent=2))

@@ -248,6 +248,22 @@ def _known_negative_sign_lo(batch: int, known: bool) -> Array | None:
     return jnp.ones((batch,), bool) if known else None
 
 
+def _param_col(p, dtype=jnp.float32) -> Array:
+    """Problem parameter as a broadcast-ready column.
+
+    Scalars stay 0-d (broadcast over the whole (B, M) grid); per-row
+    parameter vectors (B,) become (B, 1) columns — this is how per-slot
+    sampler configs ride the engine's native batch axis (serving PR).
+    """
+    arr = jnp.asarray(p, dtype)
+    if arr.ndim == 0:
+        return arr
+    if arr.ndim == 1:
+        return arr[:, None]
+    raise ValueError(f"problem parameter must be scalar or (B,), "
+                     f"got shape {arr.shape}")
+
+
 @register("count_above", "jnp")
 def _count_above_jnp(operand: Array, *, k) -> MonotoneProblem:
     """f(tau) = k - #{v : row[v] > tau}; monotone non-decreasing in tau.
@@ -259,9 +275,11 @@ def _count_above_jnp(operand: Array, *, k) -> MonotoneProblem:
     lo0 = jnp.min(x, axis=-1) - 1.0
     hi0 = jnp.max(x, axis=-1) + 1.0
 
+    k_col = _param_col(k)
+
     def multi_eval(taus: Array) -> Array:
         counts = jnp.sum(x[:, None, :] > taus[:, :, None], axis=-1)
-        return jnp.float32(k) - counts.astype(jnp.float32)
+        return k_col - counts.astype(jnp.float32)
 
     # f(lo0) = k - V: negative whenever k < V (the non-degenerate case).
     sign_lo = _known_negative_sign_lo(
@@ -277,10 +295,12 @@ def _mass_jnp(operand: Array, *, p) -> MonotoneProblem:
     lo0 = jnp.zeros(probs.shape[:-1], probs.dtype)
     hi0 = jnp.max(probs, axis=-1) + jnp.asarray(1e-6, probs.dtype)
 
+    p_col = _param_col(p, probs.dtype)
+
     def multi_eval(taus: Array) -> Array:
         keep = probs[:, None, :] >= taus[:, :, None]
         mass = jnp.sum(jnp.where(keep, probs[:, None, :], 0.0), axis=-1)
-        return jnp.asarray(p, probs.dtype) - mass
+        return p_col - mass
 
     return MonotoneProblem(multi_eval, lo0, hi0)
 
@@ -295,12 +315,14 @@ def _entropy_jnp(
     lo0 = jnp.full((batch,), t_lo, jnp.float32)
     hi0 = jnp.full((batch,), t_hi, jnp.float32)
 
+    target_col = _param_col(target)
+
     def multi_eval(ts: Array) -> Array:
         zt = z[:, None, :] / ts[:, :, None]                 # (B, M, V)
         lse = jax.nn.logsumexp(zt, axis=-1, keepdims=True)
         logp = zt - lse
         h = -jnp.sum(jnp.exp(logp) * logp, axis=-1)          # (B, M)
-        return jnp.asarray(target, jnp.float32) - h
+        return target_col - h
 
     return MonotoneProblem(multi_eval, lo0, hi0)
 
@@ -313,9 +335,11 @@ def _count_below_jnp(operand: Array, *, q) -> MonotoneProblem:
     lo0 = jnp.min(x, axis=-1) - 1.0
     hi0 = jnp.max(x, axis=-1) + 1.0
 
+    q_col = _param_col(q)
+
     def multi_eval(cs: Array) -> Array:
         below = jnp.sum(x[:, None, :] < cs[:, :, None], axis=-1)
-        return below.astype(jnp.float32) / n - jnp.asarray(q, jnp.float32)
+        return below.astype(jnp.float32) / n - q_col
 
     # f(lo0) = 0/N - q: negative for any positive static q.
     sign_lo = _known_negative_sign_lo(

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import solver
-from repro.core.solver import MonotoneProblem, register
+from repro.core.solver import MonotoneProblem, _param_col, register
 from repro.kernels import ops
 
 Array = jax.Array
@@ -42,9 +42,10 @@ def _from_jnp(kind: str, operand: Array, **params) -> MonotoneProblem:
 @register("count_above", "pallas")
 def _count_above_pallas(operand: Array, *, k) -> MonotoneProblem:
     x = operand.astype(jnp.float32)
+    k_col = _param_col(k)
 
     def multi_eval(taus: Array) -> Array:
-        return jnp.float32(k) - ops.multi_count(x, taus)
+        return k_col - ops.multi_count(x, taus)
 
     fused = None
     if isinstance(k, int):
@@ -64,9 +65,10 @@ def _count_above_pallas(operand: Array, *, k) -> MonotoneProblem:
 @register("mass_at_or_above", "pallas")
 def _mass_pallas(operand: Array, *, p) -> MonotoneProblem:
     probs = operand.astype(jnp.float32)
+    p_col = _param_col(p, probs.dtype)
 
     def multi_eval(taus: Array) -> Array:
-        return jnp.asarray(p, probs.dtype) - ops.multi_mass(probs, taus)
+        return p_col - ops.multi_mass(probs, taus)
 
     return dataclasses.replace(
         _from_jnp("mass_at_or_above", probs, p=p), multi_eval=multi_eval
@@ -76,9 +78,10 @@ def _mass_pallas(operand: Array, *, p) -> MonotoneProblem:
 @register("entropy_at_temperature", "pallas")
 def _entropy_pallas(operand: Array, *, target, **bracket) -> MonotoneProblem:
     z = operand.astype(jnp.float32)
+    target_col = _param_col(target)
 
     def multi_eval(ts: Array) -> Array:
-        return jnp.asarray(target, jnp.float32) - ops.multi_entropy(z, ts)
+        return target_col - ops.multi_entropy(z, ts)
 
     return dataclasses.replace(
         _from_jnp("entropy_at_temperature", z, target=target, **bracket),
@@ -91,10 +94,11 @@ def _count_below_pallas(operand: Array, *, q) -> MonotoneProblem:
     x = operand.astype(jnp.float32)
     n = x.shape[-1]
     neg_x = -x
+    q_col = _param_col(q)
 
     def multi_eval(cs: Array) -> Array:
         below = ops.multi_count(neg_x, -cs)      # #{x < c} == #{-x > -c}
-        return below / n - jnp.asarray(q, jnp.float32)
+        return below / n - q_col
 
     return dataclasses.replace(
         _from_jnp("count_below", operand, q=q), multi_eval=multi_eval

@@ -1,7 +1,17 @@
 """Serving driver: batched generation with the runahead-bisection sampler.
 
+One-shot mode (the whole batch prefills and decodes in lock step):
+
   PYTHONPATH=src python -m repro.launch.serve \
       --arch qwen3-4b --reduced --batch 4 --prompt-len 16 --new-tokens 32
+
+Continuous-batching mode (fixed slot pool, per-step admit/evict — requests
+with staggered arrivals stream through ``serving.server.RunaheadServer``;
+per-request token streams are identical to one-shot, see DESIGN.md §9):
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --arch qwen3-4b --reduced --continuous --requests 12 --slots 4 \
+      --prompt-len 16 --new-tokens 32 --backend jnp
 """
 from __future__ import annotations
 
@@ -11,14 +21,80 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models.testing import reduced_config
 from repro.models.transformer import init_params
 from repro.serving.engine import generate
 from repro.serving.sampler import SamplerConfig
+from repro.serving.server import Request, RunaheadServer
 
 log = logging.getLogger("repro.serve")
+
+
+def _run_oneshot(cfg, params, args, sc, key):
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab)
+    frames = (jax.random.normal(key, (args.batch, cfg.encoder_len,
+                                      cfg.d_model), jnp.bfloat16)
+              if cfg.is_encdec else None)
+    t0 = time.time()
+    toks = generate(cfg, params, prompt, args.new_tokens, key,
+                    sampler=sc, encoder_frames=frames)
+    toks.block_until_ready()
+    dt = time.time() - t0
+    n_tok = args.batch * args.new_tokens
+    log.info("generated %d tokens in %.2fs (%.1f tok/s, incl. compile)",
+             n_tok, dt, n_tok / dt)
+    log.info("sample row: %s", toks[0, :16].tolist())
+    assert bool(jnp.all(toks >= 0)) and bool(jnp.all(toks < cfg.vocab))
+    return toks
+
+
+def _run_continuous(cfg, params, args, sc):
+    if cfg.is_encdec:
+        raise SystemExit("--continuous does not drive enc-dec archs yet")
+    rng = np.random.default_rng(args.seed)
+    context = args.prompt_len + args.new_tokens
+    server = RunaheadServer(
+        cfg, params, n_slots=args.slots, context=context,
+        spec_k=sc.spec_k, rounds=sc.rounds, backend=sc.backend,
+    )
+    requests = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, size=args.prompt_len).tolist(),
+            n_new=int(rng.integers(max(1, args.new_tokens // 2),
+                                   args.new_tokens + 1)),
+            seed=args.seed + i,
+            sampler=sc,
+            arrival=i // max(1, args.arrival_burst),
+        )
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    done = server.run(requests)
+    dt = time.time() - t0
+    n_tok = sum(len(c.tokens) for c in done)
+    lat = np.sort(np.asarray([c.latency_s for c in done]))
+    log.info(
+        "served %d requests / %d tokens in %.2fs over %d decode steps "
+        "(%.1f tok/s incl. compile; %d slots)",
+        len(done), n_tok, dt, server.scheduler.n_decode_steps,
+        n_tok / dt, args.slots,
+    )
+    log.info("latency p50=%.0fms p99=%.0fms max=%.0fms; "
+             "max queue wait %d steps",
+             1e3 * float(np.quantile(lat, 0.5)),
+             1e3 * float(np.quantile(lat, 0.99)),
+             1e3 * float(lat[-1]),
+             max(c.queue_steps for c in done))
+    for c in sorted(done, key=lambda c: c.rid)[:4]:
+        log.info("rid=%s first tokens: %s", c.rid, c.tokens[:8])
+    assert len(done) == args.requests
+    assert all(0 <= t < cfg.vocab for c in done for t in c.tokens)
+    return done
 
 
 def main(argv=None):
@@ -34,6 +110,14 @@ def main(argv=None):
     ap.add_argument("--target-entropy", type=float, default=None)
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-based continuous batching (RunaheadServer)")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="[continuous] number of requests to serve")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="[continuous] decode slot pool size")
+    ap.add_argument("--arrival-burst", type=int, default=2,
+                    help="[continuous] requests arriving per decode step")
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO,
@@ -41,11 +125,6 @@ def main(argv=None):
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(cfg, key, jnp.bfloat16)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab)
-    frames = (jax.random.normal(key, (args.batch, cfg.encoder_len,
-                                      cfg.d_model), jnp.bfloat16)
-              if cfg.is_encdec else None)
     sc = SamplerConfig(
         temperature=args.temperature,
         target_entropy=args.target_entropy,
@@ -53,17 +132,9 @@ def main(argv=None):
         top_p=args.top_p,
         backend=args.backend,
     )
-    t0 = time.time()
-    toks = generate(cfg, params, prompt, args.new_tokens, key,
-                    sampler=sc, encoder_frames=frames)
-    toks.block_until_ready()
-    dt = time.time() - t0
-    n_tok = args.batch * args.new_tokens
-    log.info("generated %d tokens in %.2fs (%.1f tok/s, incl. compile)",
-             n_tok, dt, n_tok / dt)
-    log.info("sample row: %s", toks[0, :16].tolist())
-    assert bool(jnp.all(toks >= 0)) and bool(jnp.all(toks < cfg.vocab))
-    return toks
+    if args.continuous:
+        return _run_continuous(cfg, params, args, sc)
+    return _run_oneshot(cfg, params, args, sc, key)
 
 
 if __name__ == "__main__":

@@ -388,51 +388,83 @@ def decode_attend(
     p: Params,
     cfg: ModelConfig,
     x: jax.Array,            # (B, 1, D) current token
-    pos: jax.Array,          # () int32 absolute position
+    pos: jax.Array,          # () int32 shared position, or (B,) per-slot
     cache: KVCache,
     *,
     window: int | jax.Array = 0,
 ) -> tuple[jax.Array, KVCache]:
-    """One decode step: append K/V at pos (mod capacity), attend over cache."""
+    """One decode step: append K/V at pos (mod capacity), attend over cache.
+
+    ``pos`` may be a scalar (lock-step batch: one-shot ``generate``) or a
+    (B,) vector (continuous batching: each slot at its own depth).  The
+    scalar path keeps the contiguous ``dynamic_update_slice`` write; the
+    vector path scatters one ring slot per row and builds a per-row
+    validity mask — same values row-for-row when the positions coincide.
+    """
     B = x.shape[0]
     q = _project_q(p, cfg, x)                                # (B,1,nq,hd)
     k_new, v_new = _project_kv(p, cfg, x)                    # (B,1,nkv,hd)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    pvec = pos[:, None] if per_slot else jnp.full((B, 1), pos, jnp.int32)
     if not cfg.learned_pos:
-        pvec = jnp.full((B, 1), pos, jnp.int32)
         q = apply_rope_heads(q, pvec, cfg.rope_theta)
         k_new = apply_rope_heads(k_new, pvec, cfg.rope_theta)
 
     C = cache.capacity
     slot = (pos % C).astype(jnp.int32)
+
+    if per_slot:
+        rows = jnp.arange(B)
+
+        def write(buf, new):                     # (B,C,...) <- (B,1,...)
+            return buf.at[rows, slot].set(new[:, 0])
+    else:
+
+        def write(buf, new):
+            start = (0, slot) + (0,) * (buf.ndim - 2)
+            return jax.lax.dynamic_update_slice(buf, new, start)
+
     new_cache: KVCache
     if cache.quantized:
         kq, ks = _quantize_kv(k_new)
         vq, vs = _quantize_kv(v_new)
-        k_i8 = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
-        v_i8 = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
-        k_sc = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, slot, 0))
-        v_sc = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, slot, 0))
-        k_i8 = shard(k_i8, "batch", "cache_seq", "kv_heads", None)
-        v_i8 = shard(v_i8, "batch", "cache_seq", "kv_heads", None)
+        k_i8 = shard(write(cache.k, kq), "batch", "cache_seq", "kv_heads",
+                     None)
+        v_i8 = shard(write(cache.v, vq), "batch", "cache_seq", "kv_heads",
+                     None)
+        k_sc = write(cache.k_scale, ks)
+        v_sc = write(cache.v_scale, vs)
         new_cache = KVCache(k=k_i8, v=v_i8, k_scale=k_sc, v_scale=v_sc)
         k = _dequantize_kv(k_i8, k_sc, x.dtype)
         v = _dequantize_kv(v_i8, v_sc, x.dtype)
     else:
-        k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
-        k = shard(k, "batch", "cache_seq", "kv_heads", None)
-        v = shard(v, "batch", "cache_seq", "kv_heads", None)
+        k = shard(write(cache.k, k_new), "batch", "cache_seq", "kv_heads",
+                  None)
+        v = shard(write(cache.v, v_new), "batch", "cache_seq", "kv_heads",
+                  None)
         new_cache = KVCache(k=k, v=v)
 
     # validity: ring slot s holds absolute position p_s; it is attendable iff
     # p_s <= pos and p_s > pos - C (ring eviction) and (SWA) p_s > pos - w.
     slots = jnp.arange(C)
-    wraps = (pos // C).astype(jnp.int32)
-    p_s = jnp.where(slots <= slot, wraps * C + slots, (wraps - 1) * C + slots)
-    valid = (p_s >= 0) & (p_s <= pos)
     w = jnp.asarray(window)
-    valid &= (p_s > pos - w) | (w <= 0)
-    mask = valid[None, None, None, :]                        # (1,1,1,C)
+    if per_slot:
+        slots = slots[None, :]                               # (1, C)
+        pos_c, slot_c = pos[:, None], slot[:, None]          # (B, 1)
+        wraps = (pos_c // C).astype(jnp.int32)
+        p_s = jnp.where(slots <= slot_c, wraps * C + slots,
+                        (wraps - 1) * C + slots)
+        valid = (p_s >= 0) & (p_s <= pos_c)
+        valid &= (p_s > pos_c - w) | (w <= 0)
+        mask = valid[:, None, None, :]                       # (B,1,1,C)
+    else:
+        wraps = (pos // C).astype(jnp.int32)
+        p_s = jnp.where(slots <= slot, wraps * C + slots,
+                        (wraps - 1) * C + slots)
+        valid = (p_s >= 0) & (p_s <= pos)
+        valid &= (p_s > pos - w) | (w <= 0)
+        mask = valid[None, None, None, :]                    # (1,1,1,C)
 
     out = _decode_sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
     out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)

@@ -308,17 +308,27 @@ def decode_step(
     cfg: ModelConfig,
     params: Params,
     token: jax.Array,                  # (B,) int32 current token
-    pos: jax.Array,                    # () int32 its absolute position
+    pos: jax.Array,                    # () int32 shared, or (B,) per-slot
     cache: Cache,
     *,
     compute_dtype=jnp.bfloat16,
     capacity_mode: str = "fifo",
 ) -> tuple[jax.Array, Cache]:
-    """One decode step: returns (logits (B, V) f32, updated cache)."""
+    """One decode step: returns (logits (B, V) f32, updated cache).
+
+    ``pos`` is either a scalar (every row at the same depth — one-shot
+    ``generate``) or a (B,) vector (continuous batching: heterogeneous
+    in-flight requests, one position per slot).  Either way this is ONE
+    compiled function: the continuous scheduler re-uses the same jitted
+    step across arbitrary slot occupancy.
+    """
     B = token.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
     x = embed(params["embed"], token[:, None], compute_dtype)  # (B, 1, D)
     if cfg.learned_pos:
-        x = x + params["pos_embed"].astype(compute_dtype)[None, pos][:, None]
+        pe = params["pos_embed"].astype(compute_dtype)
+        x = x + (pe[pos][:, None] if pos.ndim == 1
+                 else pe[None, pos][:, None])
 
     new_cache: Cache = []
     for run_params, entry, (kind, _) in zip(
@@ -338,3 +348,51 @@ def decode_step(
     table = params["embed"].T if cfg.tie_embeddings else params["unembed"]
     logits = unembed(table, x[:, 0], cfg.vocab)
     return shard(logits, "batch", "vocab"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# slotted cache (continuous batching)
+# ---------------------------------------------------------------------------
+
+def write_cache_slot(cache: Cache, sub: Cache, slot) -> Cache:
+    """Overwrite batch row `slot` of `cache` with the B=1 cache `sub`.
+
+    Every cache leaf is laid out (layers, batch, ...), so one tree_map
+    scatters the whole pytree — KV rings, SSM states, xLSTM states and
+    encoder K/V alike.  This is the admission path of the continuous
+    scheduler: the evicted request's slot is recycled in place, no
+    reallocation and no copy of the other slots.
+    """
+
+    def wr(big, small):
+        return big.at[:, slot].set(small[:, 0])
+
+    return jax.tree_util.tree_map(wr, cache, sub)
+
+
+def prefill_into_slot(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                 # (1, S) one request's prompt
+    context: int,
+    cache: Cache,
+    slot,
+    *,
+    encoder_frames: jax.Array | None = None,
+    compute_dtype=jnp.bfloat16,
+    capacity_mode: str = "fifo",
+    kv_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Cache]:
+    """Prefill ONE request and land its state in batch row `slot`.
+
+    Returns (last-position logits (1, V) f32, updated slotted cache).  The
+    prefill math is the ordinary batched `prefill` at B=1, so a request's
+    state is bit-identical whether it was admitted into a slot or served
+    one-shot; `context` must match the slotted cache's capacity.
+    """
+    logits, sub = prefill(
+        cfg, params, tokens, context, encoder_frames=encoder_frames,
+        compute_dtype=compute_dtype, capacity_mode=capacity_mode,
+        kv_dtype=kv_dtype,
+    )
+    return logits, write_cache_slot(cache, sub, slot)

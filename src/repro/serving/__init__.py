@@ -1,4 +1,21 @@
-from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.sampler import (
+    SamplerConfig,
+    SlotSamplers,
+    sample,
+    sample_slots,
+)
 from repro.serving.engine import generate
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.server import Completion, Request, RunaheadServer
 
-__all__ = ["SamplerConfig", "sample", "generate"]
+__all__ = [
+    "SamplerConfig",
+    "SlotSamplers",
+    "sample",
+    "sample_slots",
+    "generate",
+    "ContinuousScheduler",
+    "Request",
+    "Completion",
+    "RunaheadServer",
+]

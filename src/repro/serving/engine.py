@@ -22,7 +22,15 @@ def generate(
     sampler: SamplerConfig = SamplerConfig(),
     encoder_frames: jax.Array | None = None,
 ) -> jax.Array:
-    """Returns generated tokens (B, n_new) int32."""
+    """Returns generated tokens (B, n_new) int32.
+
+    The first token comes from the prefill logits; each of the remaining
+    ``n_new - 1`` comes from one decode step.  The scan emits the token it
+    just SAMPLED (``nxt``), not the carry — emitting the carry would
+    compute a final sampled token and drop it, spending ``n_new`` decode
+    steps for ``n_new`` tokens instead of ``n_new - 1``
+    (tests/test_serving_engine.py pins the step count).
+    """
     B, S = prompt.shape
     context = context or (S + n_new)
     logits, cache = prefill(
@@ -31,14 +39,16 @@ def generate(
     key, sub = jax.random.split(key)
     first = sample(logits, sub, sampler)
 
-    def body(carry, i):
+    def body(carry, _):
         token, pos, cache, key = carry
         key, sub = jax.random.split(key)
         logits, cache = decode_step(cfg, params, token, pos, cache)
         nxt = sample(logits, sub, sampler)
-        return (nxt, pos + 1, cache, key), token
+        return (nxt, pos + 1, cache, key), nxt
 
-    (_, _, _, _), toks = jax.lax.scan(
-        body, (first, jnp.int32(S), cache, key), jnp.arange(n_new)
+    _, rest = jax.lax.scan(
+        body, (first, jnp.int32(S), cache, key), None,
+        length=max(n_new - 1, 0),
     )
-    return toks.swapaxes(0, 1)                              # (B, n_new)
+    toks = jnp.concatenate([first[None], rest], axis=0)     # (max(n_new,1), B)
+    return toks[:n_new].swapaxes(0, 1)                      # (B, n_new)

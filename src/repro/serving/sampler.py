@@ -23,6 +23,7 @@ engine problems via repro.core.applications.
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -78,3 +79,121 @@ def sample(
 
 def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# per-slot sampling (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# The continuous scheduler keeps heterogeneous requests in flight: each slot
+# carries its OWN temperature / top-k / top-p / target-entropy and its own
+# PRNG key chain.  The per-slot parameters are (B,) arrays routed straight
+# into the solver engine's native batch axis (core/solver.py `_param_col`),
+# so one fused multi_eval still answers every candidate for every slot —
+# the whole point of the batched engine.
+#
+# Bit-exactness contract (asserted by tests/test_serving_engine.py): row b
+# of `sample_slots` produces the SAME token as a B=1 `sample()` call with
+# that slot's scalar SamplerConfig and key.  Disabled features are applied
+# as identity `where`s (z unchanged bit-for-bit), and the per-row
+# categorical draws the same threefry stream as the (1, V) scalar path.
+
+class SlotSamplers(NamedTuple):
+    """Per-slot sampler parameters, one (B,) array per knob.
+
+    ``target_entropy`` uses NaN for "off" (fall back to ``temperature``);
+    ``top_k`` uses 0, ``top_p`` uses 0.0 — the same sentinels as
+    SamplerConfig.  ``spec_k`` / ``rounds`` / ``backend`` stay static and
+    uniform across slots (they shape the compiled solve).
+    """
+
+    temperature: jax.Array       # (B,) f32
+    target_entropy: jax.Array    # (B,) f32, NaN = off
+    top_k: jax.Array             # (B,) int32, 0 = off
+    top_p: jax.Array             # (B,) f32, 0.0 = off
+
+    @staticmethod
+    def stack(configs: Sequence[SamplerConfig]) -> "SlotSamplers":
+        """Stack scalar configs into slot arrays (host-side, at admission).
+
+        spec_k / rounds / backend must agree across slots — they are
+        static arguments of the compiled step, not per-slot data.
+        """
+        uniform = {(c.spec_k, c.rounds, c.backend) for c in configs}
+        if len(uniform) > 1:
+            raise ValueError(
+                f"spec_k/rounds/backend must be uniform across slots, "
+                f"got {sorted(uniform)}"
+            )
+        nan = float("nan")
+        return SlotSamplers(
+            temperature=jnp.asarray(
+                [c.temperature for c in configs], jnp.float32),
+            target_entropy=jnp.asarray(
+                [nan if c.target_entropy is None else c.target_entropy
+                 for c in configs], jnp.float32),
+            top_k=jnp.asarray([c.top_k for c in configs], jnp.int32),
+            top_p=jnp.asarray([c.top_p for c in configs], jnp.float32),
+        )
+
+
+def sample_slots(
+    logits: jax.Array,                 # (B, V) f32
+    keys: jax.Array,                   # (B, 2) uint32 per-slot PRNG keys
+    slots: SlotSamplers,
+    *,
+    spec_k: int = 5,
+    rounds: int = 8,
+    backend: str = "jnp",
+    enable: tuple[bool, bool, bool] = (True, True, True),
+    top_k_static: int | None = None,
+) -> jax.Array:
+    """Sample next tokens (B,) int32, one independent stream per slot.
+
+    ``enable`` = (entropy, top_k, top_p) statically gates each solve: when
+    NO in-flight request uses a feature the scheduler compiles it away, so
+    a homogeneous top-k-only batch pays exactly one solve per step — the
+    same work as the one-shot engine.  Per-row sentinels handle the mixed
+    case inside an enabled solve.
+
+    ``top_k_static``: when every ACTIVE slot shares the same top_k > 0 the
+    scheduler passes it as a python int, which re-enables the static-k fast
+    paths a traced (B,) k forfeits (the fused VMEM-resident pallas kernel,
+    the known-sign probe skip); idle rows get k-masked too, but their
+    tokens are discarded.  Same masked logits bit-for-bit either way.
+    """
+    z = logits.astype(jnp.float32)
+    z = jnp.maximum(z, jnp.max(z, axis=-1, keepdims=True) - 80.0)
+    kw = dict(spec_k=spec_k, rounds=rounds, backend=backend)
+    en_entropy, en_topk, en_topp = enable
+
+    if en_entropy:
+        has_target = ~jnp.isnan(slots.target_entropy)
+        # off rows solve a dummy target; their t is discarded by the where
+        target = jnp.where(has_target, slots.target_entropy, 1.0)
+        t = entropy_temperature(z, target, **kw)
+        denom = jnp.where(has_target, t, slots.temperature)
+    else:
+        denom = slots.temperature
+    z = z / denom[:, None]
+
+    if en_topk and top_k_static is not None:
+        z = jnp.where(topk_mask(z, top_k_static, **kw), z, NEG_INF)
+    elif en_topk:
+        on = slots.top_k > 0
+        k_eff = jnp.where(on, slots.top_k, 1)
+        mask = topk_mask(z, k_eff, **kw)
+        z = jnp.where(mask | ~on[:, None], z, NEG_INF)
+    if en_topp:
+        on = slots.top_p > 0.0
+        p_eff = jnp.where(on, slots.top_p, 0.5)
+        probs = jax.nn.softmax(z, axis=-1)
+        mask = topp_mask(probs, p_eff, **kw)
+        z = jnp.where(mask | ~on[:, None], z, NEG_INF)
+
+    # Per-row categorical: threefry draws for a (V,) shape are the (1, V)
+    # draws of the scalar path, so row streams are batch-composition
+    # independent — the property one-shot/continuous equivalence rests on.
+    return jax.vmap(
+        lambda k, row: jax.random.categorical(k, row, axis=-1)
+    )(keys, z).astype(jnp.int32)

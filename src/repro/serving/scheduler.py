@@ -1,0 +1,311 @@
+"""Fixed-slot continuous-batching scheduler (DESIGN.md §9).
+
+The paper's runahead premise — idle parallel lanes should absorb serial
+latency — applied at the REQUEST level: the solver engine's batch axis is
+only busy while every row has a live request, so the scheduler keeps a
+fixed pool of `n_slots` decode lanes and admits/evicts requests per decode
+step instead of waiting for a whole batch to drain (the one-shot
+``serving.engine.generate`` shape).
+
+Device state is slot-major and fixed-shape:
+
+  * one slotted KV cache (``models.decode.init_cache`` at batch=n_slots),
+    recycled in place by per-slot prefill (``prefill_into_slot``);
+  * (B,) current-token / position vectors — ``decode_step`` natively
+    supports per-slot positions, so heterogeneous in-flight requests share
+    ONE compiled step function across arbitrary slot occupancy;
+  * (B, 2) per-slot PRNG keys — each request's key chain is identical to
+    a B=1 one-shot ``generate`` with its seed, which makes continuous
+    serving token-identical per request (tests/test_serving_engine.py);
+  * per-slot sampler parameters (``SlotSamplers``) riding the solver
+    engine's batch axis.
+
+Host state is a plain slot table (request id, tokens emitted, remaining
+budget) plus a FIFO of waiting requests.  Admission runs the ordinary B=1
+prefill and scatters the resulting cache into the free slot; eviction is
+just marking the slot free — the next admission overwrites it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.decode import decode_step, init_cache, prefill_into_slot
+from repro.serving.sampler import (
+    SamplerConfig,
+    SlotSamplers,
+    sample_slots,
+)
+
+
+@dataclasses.dataclass
+class _SlotInfo:
+    """Host-side bookkeeping for one occupied slot."""
+
+    rid: Any
+    remaining: int                  # decode steps still owed
+    tokens: list[int]               # emitted so far (includes prefill token)
+    sampler: SamplerConfig
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: Any
+    tokens: list[int]
+
+
+def _enable_bits(configs: list[SamplerConfig]) -> tuple[bool, bool, bool]:
+    """(entropy, top_k, top_p) static gates for the compiled step: a solve
+    compiles in only while SOME in-flight request uses it."""
+    return (
+        any(c.target_entropy is not None for c in configs),
+        any(c.top_k > 0 for c in configs),
+        any(c.top_p > 0.0 for c in configs),
+    )
+
+
+def _static_top_k(configs: list[SamplerConfig]) -> int | None:
+    """The shared top_k when every config agrees on one positive value —
+    lets sample_slots take the static-k fast paths (fused pallas kernel,
+    probe skip)."""
+    ks = {c.top_k for c in configs}
+    if len(ks) == 1:
+        k = ks.pop()
+        if k > 0:
+            return k
+    return None
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "context", "cache_dtype"),
+    donate_argnames=("cache",),
+)
+def _admit_slot(params, tokens, cache, slot, key, *, cfg, context,
+                cache_dtype):
+    """Jitted admission: B=1 prefill scattered into `slot`, plus the
+    request's first key split.  Compiles once per (cfg, prompt length) and
+    is shared across scheduler instances; the first-token sample stays
+    outside (it is shaped by the request's own SamplerConfig).  The old
+    cache is donated — the scatter happens in place."""
+    logits, cache = prefill_into_slot(
+        cfg, params, tokens, context, cache, slot, kv_dtype=cache_dtype,
+    )
+    key, sub = jax.random.split(key)
+    return logits, cache, key, sub
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec_k", "rounds", "backend", "enable",
+                     "top_k_static"),
+)
+def _admit_sample(logits, keys, slots, *, spec_k, rounds, backend, enable,
+                  top_k_static):
+    """Jitted first-token sample at admission, through the SAME per-slot
+    sampler as the decode step at B=1 — all float knobs are traced, so the
+    jit cache is bounded by the (few) static gate combinations, never by
+    how many distinct temperatures users pick."""
+    return sample_slots(logits, keys, slots, spec_k=spec_k, rounds=rounds,
+                        backend=backend, enable=enable,
+                        top_k_static=top_k_static)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spec_k", "rounds", "backend", "enable",
+                     "top_k_static"),
+    donate_argnames=("token", "pos", "keys", "cache"),
+)
+def _scheduler_step(params, token, pos, keys, active, cache, slots, *,
+                    cfg, spec_k, rounds, backend, enable, top_k_static):
+    """THE compiled continuous-batching decode step (module-level so the
+    jit cache is shared by every scheduler instance in the process).
+
+    One ``decode_step`` over all slots at their own positions, one
+    per-slot key split, one ``sample_slots`` through the engine's batch
+    axis; inactive slots are masked to keep their state frozen.  The big
+    inputs are donated so XLA updates the KV cache in place instead of
+    copying it every token (donation is a no-op on CPU test runs).
+    """
+    logits, new_cache = decode_step(cfg, params, token, pos, cache)
+    ks = jax.vmap(jax.random.split)(keys)                   # (B, 2, 2)
+    new_keys = jnp.where(active[:, None], ks[:, 0], keys)
+    nxt = sample_slots(logits, ks[:, 1], slots, spec_k=spec_k,
+                       rounds=rounds, backend=backend, enable=enable,
+                       top_k_static=top_k_static)
+    new_token = jnp.where(active, nxt, token)
+    new_pos = jnp.where(active, pos + 1, pos)
+    return new_token, new_pos, new_keys, new_cache, nxt
+
+
+class ContinuousScheduler:
+    """Slot-based continuous batcher over the runahead sampler.
+
+    One instance owns the slotted cache; callers drive it with ``admit``
+    / ``step`` / ``pop_finished``.  The step function is jitted once per
+    distinct (cfg, solver statics, feature-gate) key and shared across
+    instances — slot occupancy, positions, and per-slot sampler values
+    are all traced data, never recompile triggers.  Prompt-length changes
+    recompile the admission prefill only, never the step.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        n_slots: int,
+        context: int,
+        spec_k: int = 5,
+        rounds: int = 8,
+        backend: str = "jnp",
+        cache_dtype=jnp.bfloat16,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.context = context
+        self.spec_k, self.rounds, self.backend = spec_k, rounds, backend
+        self.cache_dtype = cache_dtype
+
+        self.cache = init_cache(cfg, n_slots, context, cache_dtype)
+        self.token = jnp.zeros((n_slots,), jnp.int32)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
+        self.slots: list[_SlotInfo | None] = [None] * n_slots
+        self._finished: list[FinishedRequest] = []
+        self._step_args = None           # (slots_arr, active, enable, k)
+        self.n_decode_steps = 0          # batched decode launches (stats)
+
+    # -- occupancy ----------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def has_free_slot(self) -> bool:
+        return self.n_active < self.n_slots
+
+    def pop_finished(self) -> list[FinishedRequest]:
+        done, self._finished = self._finished, []
+        return done
+
+    def validate_request(self, n_new: int, sampler: SamplerConfig) -> None:
+        """Reject what the shared compiled step cannot serve — called by
+        the server at submit() time, BEFORE a request enters the queue."""
+        if n_new < 1:
+            raise ValueError(f"n_new must be >= 1, got {n_new}")
+        if (sampler.spec_k, sampler.rounds, sampler.backend) != (
+            self.spec_k, self.rounds, self.backend
+        ):
+            raise ValueError(
+                "request sampler spec_k/rounds/backend must match the "
+                "scheduler's (they are compiled into the shared step)"
+            )
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(
+        self,
+        rid: Any,
+        prompt,
+        n_new: int,
+        seed: int,
+        sampler: SamplerConfig = SamplerConfig(),
+        *,
+        encoder_frames: jax.Array | None = None,
+    ) -> bool:
+        """Prefill one request into a free slot; False when pool is full.
+
+        Replays exactly the one-shot engine's opening moves for this
+        request at B=1: prefill, split the request key, sample the first
+        token from the prefill logits with the request's own config.
+        """
+        self.validate_request(n_new, sampler)
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return False
+        i = free[0]
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
+        if encoder_frames is None:
+            logits, self.cache, key, sub = _admit_slot(
+                self.params, prompt, self.cache, jnp.int32(i),
+                jax.random.PRNGKey(seed), cfg=self.cfg,
+                context=self.context, cache_dtype=self.cache_dtype,
+            )
+        else:                        # enc-dec: frames vary per request,
+            # keep this rare path eager rather than grow the jit cache
+            logits, self.cache = prefill_into_slot(
+                self.cfg, self.params, prompt, self.context, self.cache, i,
+                encoder_frames=encoder_frames, kv_dtype=self.cache_dtype,
+            )
+            key, sub = jax.random.split(jax.random.PRNGKey(seed))
+        first = int(_admit_sample(
+            logits, sub[None], SlotSamplers.stack([sampler]),
+            spec_k=self.spec_k, rounds=self.rounds, backend=self.backend,
+            enable=_enable_bits([sampler]),
+            top_k_static=_static_top_k([sampler]),
+        )[0])
+
+        self.token = self.token.at[i].set(first)
+        self.pos = self.pos.at[i].set(prompt.shape[1])
+        self.keys = self.keys.at[i].set(key)
+        info = _SlotInfo(rid, n_new - 1, [first], sampler)
+        if info.remaining <= 0:          # n_new == 1: done at admission
+            self._finished.append(FinishedRequest(rid, info.tokens))
+        else:
+            self.slots[i] = info
+            self._step_args = None       # occupancy changed
+        return True
+
+    # -- the compiled decode step -------------------------------------------
+
+    def step(self) -> dict[Any, int]:
+        """One decode step over every active slot: {rid: token emitted}.
+
+        Inactive slots ride along masked out — their token/pos/key stay
+        frozen and their cache rows hold dead data until re-admission
+        overwrites them — so the launch shape never changes.
+        """
+        live = [s.sampler for s in self.slots if s is not None]
+        if not live:
+            return {}
+        if self._step_args is None:      # occupancy changed since last step
+            idle = SamplerConfig(spec_k=self.spec_k, rounds=self.rounds,
+                                 backend=self.backend)
+            self._step_args = (
+                SlotSamplers.stack([s.sampler if s is not None else idle
+                                    for s in self.slots]),
+                jnp.asarray([s is not None for s in self.slots]),
+                _enable_bits(live),
+                _static_top_k(live),
+            )
+        slots_arr, active, enable, top_k_static = self._step_args
+        self.token, self.pos, self.keys, self.cache, nxt = _scheduler_step(
+            self.params, self.token, self.pos, self.keys, active,
+            self.cache, slots_arr,
+            cfg=self.cfg, spec_k=self.spec_k, rounds=self.rounds,
+            backend=self.backend, enable=enable, top_k_static=top_k_static,
+        )
+        self.n_decode_steps += 1
+
+        emitted: dict[Any, int] = {}
+        nxt_host = np.asarray(nxt)
+        for i, info in enumerate(self.slots):
+            if info is None:
+                continue
+            tok = int(nxt_host[i])
+            info.tokens.append(tok)
+            info.remaining -= 1
+            emitted[info.rid] = tok
+            if info.remaining == 0:
+                self._finished.append(FinishedRequest(info.rid, info.tokens))
+                self.slots[i] = None                     # evict: slot free
+                self._step_args = None
+        return emitted

@@ -82,6 +82,38 @@ def test_prefill_decode_consistency(arch, rng_key):
                                atol=atol)
 
 
+@pytest.mark.parametrize(
+    "arch", ["qwen3-4b", "qwen2-moe-a2.7b", "hymba-1.5b", "xlstm-1.3b"]
+)
+def test_prefill_plus_n_decode_matches_full_forward(arch, rng_key):
+    """Cache-consistency regression: a SHORT prefill followed by N decode
+    steps must reproduce the full-sequence forward logits at EVERY decoded
+    position — not just the first two (the serving engines only ever see
+    the incremental path, so drift at step k > 2 would ship silently)."""
+    cfg = reduced_config(arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=1000.0)  # no drops
+    atol = 4e-3 if cfg.family in ("ssm", "hybrid") else 1e-4
+    params = init_params(cfg, rng_key)
+    tokens, frames = _inputs(cfg, rng_key)                  # (B, S + 2)
+    total = tokens.shape[1]
+    full, _ = forward(cfg, params, tokens, encoder_frames=frames, remat=False)
+
+    s0 = 6                                                  # prefill length
+    pre, cache = prefill(cfg, params, tokens[:, :s0], context=32,
+                         encoder_frames=frames)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, s0 - 1]),
+                               atol=atol)
+    for pos in range(s0, total):
+        lg, cache = decode_step(cfg, params, tokens[:, pos], jnp.int32(pos),
+                                cache)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full[:, pos]), atol=atol,
+            err_msg=f"{arch}: decode step at pos {pos} drifted from the "
+                    f"full forward pass",
+        )
+
+
 @pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-1.3b"])
 def test_subquadratic_ring_cache_decode(arch, rng_key):
     """Decode far past the SWA window / with O(1) state: cache capacity

@@ -1,0 +1,181 @@
+"""End-to-end serving tests: the continuous-batching scheduler must be
+token-IDENTICAL per request to the one-shot engine under the same
+per-request seed, and the one-shot engine must spend exactly n_new - 1
+decode steps for n_new tokens (the final-sample-discard fix)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.testing import reduced_config
+from repro.models.transformer import init_params
+from repro.serving.engine import generate
+from repro.serving.sampler import SamplerConfig
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.server import (
+    Request,
+    RunaheadServer,
+    generate_oneshot_reference,
+)
+
+CONTEXT = 32
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """Tiny DENSE model: request streams must not couple across slots, and
+    MoE capacity cuts couple rows through the router by design."""
+    cfg = dataclasses.replace(
+        reduced_config("internlm2-1.8b"), n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_head=16, d_ff=64, vocab=128,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _workload(backend: str = "jnp") -> list[Request]:
+    """Staggered arrivals, heterogeneous samplers, n_new from 1 (finishes
+    inside admission) to 6 — on 2 slots this forces queueing and reuse."""
+    sc = lambda **kw: SamplerConfig(backend=backend, **kw)
+    return [
+        Request("a", [1, 2, 3, 4], 5, seed=11, sampler=sc(top_k=12)),
+        Request("b", [9, 8, 7, 6, 5], 3, seed=22, sampler=sc(top_p=0.9)),
+        Request("c", [4, 4, 4], 1, seed=33,
+                sampler=sc(target_entropy=2.0), arrival=1),
+        Request("d", [10, 20, 30, 40], 6, seed=44,
+                sampler=sc(temperature=0.7), arrival=2),
+        Request("e", [2, 4, 6, 8], 4, seed=55,
+                sampler=sc(top_k=8, top_p=0.95), arrival=4),
+    ]
+
+
+class TestContinuousMatchesOneShot:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_token_streams_identical(self, tiny, backend):
+        cfg, params = tiny
+        reqs = _workload(backend)
+        server = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT,
+                                backend=backend)
+        done = {c.rid: c for c in server.run(reqs)}
+        assert sorted(done) == sorted(r.rid for r in reqs)
+        for req in reqs:
+            ref = generate_oneshot_reference(cfg, params, req,
+                                             context=CONTEXT)
+            assert done[req.rid].tokens == ref, req.rid
+            assert len(done[req.rid].tokens) == req.n_new
+
+    def test_workload_actually_queues(self, tiny):
+        """The scheduling path under test is real: some request waited for
+        a slot, and slots were reused across requests."""
+        cfg, params = tiny
+        server = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT)
+        done = server.run(_workload())
+        assert len(done) == 5 > 2          # more requests than slots
+        assert any(c.queue_steps > 0 for c in done)
+
+    def test_streams_independent_of_neighbours(self, tiny):
+        """A request's tokens must not depend on what shares the batch:
+        same request served against two different co-resident workloads."""
+        cfg, params = tiny
+        probe = Request("p", [3, 1, 4, 1], 4, seed=99,
+                        sampler=SamplerConfig(top_k=10))
+        out = []
+        for other_seed in (1, 2):
+            other = Request("o", [5, 9, 2, 6], 6, seed=other_seed,
+                            sampler=SamplerConfig(top_p=0.8))
+            server = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT)
+            done = {c.rid: c for c in server.run([probe, other])}
+            out.append(done["p"].tokens)
+        assert out[0] == out[1]
+
+    def test_scheduler_single_compiled_step(self, tiny):
+        """Occupancy changes, per-slot params, and even a FRESH server must
+        not recompile the decode step: every (token, pos, cache) shape is
+        slot-major and fixed, and the step is a module-level jit shared by
+        all scheduler instances."""
+        from repro.serving.scheduler import _scheduler_step
+
+        cfg, params = tiny
+        server = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT)
+        server.run(_workload())
+        assert server.scheduler.n_decode_steps > 0
+        warm = _scheduler_step._cache_size()
+        rerun = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT)
+        rerun.run(_workload())
+        assert _scheduler_step._cache_size() == warm
+
+    def test_rejects_mismatched_solver_statics(self, tiny):
+        cfg, params = tiny
+        sched = ContinuousScheduler(cfg, params, n_slots=2, context=CONTEXT,
+                                    backend="jnp")
+        with pytest.raises(ValueError, match="must match the"):
+            sched.admit("x", [1, 2], 2, 0,
+                        SamplerConfig(backend="pallas"))
+
+    def test_unservable_requests_rejected_at_submit(self, tiny):
+        """Validation fires in submit(), BEFORE the queue — a failure
+        inside the admit loop would silently lose the request."""
+        cfg, params = tiny
+        server = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT)
+        with pytest.raises(ValueError, match="n_new"):
+            server.submit(Request("z", [1, 2], 0))
+        with pytest.raises(ValueError, match="must match the"):
+            server.submit(Request("z", [1, 2], 2,
+                                  sampler=SamplerConfig(backend="pallas")))
+        # the failed submits left no trace: the rid is still usable
+        server.submit(Request("z", [1, 2], 2))
+        done = server.drain()
+        assert [c.rid for c in done] == ["z"]
+
+
+class TestGenerateFinalToken:
+    """serving/engine.py fix: the scan now emits the token it sampled, so
+    n_new tokens cost n_new - 1 decode steps and the last sample is used."""
+
+    def test_exact_token_count(self, tiny):
+        cfg, params = tiny
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        for n_new in (1, 2, 5):
+            toks = generate(cfg, params, prompt, n_new,
+                            jax.random.PRNGKey(3), context=CONTEXT)
+            assert toks.shape == (1, n_new)
+
+    def test_prefix_stability(self, tiny):
+        """Growing n_new only appends: the key chain advances one split
+        per emitted token, so shorter runs are exact prefixes."""
+        cfg, params = tiny
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        full = np.asarray(generate(cfg, params, prompt, 6,
+                                   jax.random.PRNGKey(3), context=CONTEXT))
+        for n_new in (1, 3, 5):
+            part = np.asarray(generate(cfg, params, prompt, n_new,
+                                       jax.random.PRNGKey(3),
+                                       context=CONTEXT))
+            np.testing.assert_array_equal(part, full[:, :n_new])
+
+    def test_decode_step_count_is_n_minus_1(self, tiny, monkeypatch):
+        """Count decode_step EXECUTIONS (not traces) via a debug callback:
+        the buggy emit-the-carry scan ran n_new steps and threw the last
+        sample away; the fix runs exactly n_new - 1."""
+        import repro.serving.engine as eng
+
+        cfg, params = tiny
+        calls = []
+        real = eng.decode_step
+
+        def counting(cfg_, params_, token, pos, cache, **kw):
+            jax.debug.callback(lambda: calls.append(1))
+            return real(cfg_, params_, token, pos, cache, **kw)
+
+        monkeypatch.setattr(eng, "decode_step", counting)
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        for n_new in (1, 4):
+            calls.clear()
+            toks = generate(cfg, params, prompt, n_new,
+                            jax.random.PRNGKey(5), context=CONTEXT)
+            jax.block_until_ready(toks)
+            jax.effects_barrier()
+            assert toks.shape == (1, n_new)
+            assert len(calls) == n_new - 1, (n_new, len(calls))

@@ -1,0 +1,152 @@
+"""Property-based differential harness for the batched solver engine.
+
+For EVERY registered (kind, backend) pair: a random batch of monotone
+problems solved by the engine must be BIT-exact against scalar serial
+sign-bit bisection driven through the same backend's evaluator — the
+engine's speculative rounds are a pure reformulation of Algorithm 1, so
+any float divergence is a bug, not noise.  Pallas backends run in
+interpret mode on CPU (kernels/ops.py gates on the default backend).
+
+Randomisation comes in two layers:
+
+  * deterministic seeds (always run — the tier-1 floor), and
+  * hypothesis-drawn seeds/shapes via tests/_hypothesis_compat.py — the
+    property tests skip cleanly when hypothesis is absent.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import solver
+from repro.core.solver import MonotoneProblem
+
+
+def _pairs() -> list[tuple[str, str]]:
+    return sorted(
+        (kind, backend)
+        for kind in solver.kinds()
+        for backend in solver.backends_for(kind)
+    )
+
+
+PAIRS = _pairs()
+
+
+def _make_problem(kind: str, backend: str, seed: int, B: int, V: int
+                  ) -> MonotoneProblem:
+    """A random batch of monotone problems of `kind` on `backend`."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32) * 2.0)
+    if kind == "count_above":
+        return solver.problem(kind, z, backend=backend,
+                              k=int(rng.integers(1, V)))
+    if kind == "count_below":
+        return solver.problem(kind, z, backend=backend,
+                              q=float(rng.uniform(0.05, 0.95)))
+    if kind == "mass_at_or_above":
+        probs = jnp.asarray(np.exp(z) / np.exp(z).sum(-1, keepdims=True))
+        return solver.problem(kind, probs, backend=backend,
+                              p=float(rng.uniform(0.1, 0.9)))
+    if kind == "entropy_at_temperature":
+        target = float(rng.uniform(0.5, 0.9 * math.log(V)))
+        return solver.problem(kind, z, backend=backend, target=target)
+    raise AssertionError(f"unhandled kind {kind!r} — extend the harness")
+
+
+def _serial_bracket(problem: MonotoneProblem, steps: int):
+    """Scalar serial sign-bit bisection (core/bisect.py mode='signbit'),
+    one independent trajectory per row, driven through the problem's OWN
+    evaluator at M=1 — the reference the engine must reproduce bit-for-bit.
+    """
+    lo = jnp.asarray(problem.lo0)
+    hi = jnp.asarray(problem.hi0, dtype=lo.dtype)
+    if problem.sign_lo is not None:
+        sl = jnp.asarray(problem.sign_lo)
+    else:
+        sl = problem.sign_bit(problem.multi_eval(lo[:, None])[:, 0])
+    for _ in range(steps):
+        mid = (lo + hi) / 2
+        sm = problem.sign_bit(problem.multi_eval(mid[:, None])[:, 0])
+        go_left = sl != sm
+        new_lo = jnp.where(go_left, lo, mid)
+        new_hi = jnp.where(go_left, mid, hi)
+        sl = jnp.where(go_left, sl, sm)
+        lo, hi = new_lo, new_hi
+    return np.asarray(lo), np.asarray(hi)
+
+
+def _assert_engine_matches_serial(kind, backend, seed, B, V, rounds, spec_k):
+    problem = _make_problem(kind, backend, seed, B, V)
+    lo_e, hi_e = solver.solve(problem, rounds=rounds, spec_k=spec_k)
+    lo_s, hi_s = _serial_bracket(problem, rounds * spec_k)
+    np.testing.assert_array_equal(
+        np.asarray(lo_e), lo_s,
+        err_msg=f"lo diverged: {kind}/{backend} seed={seed} B={B} V={V}",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(hi_e), hi_s,
+        err_msg=f"hi diverged: {kind}/{backend} seed={seed} B={B} V={V}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# deterministic floor: always runs, hypothesis or not
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,backend", PAIRS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_bit_exact_vs_serial(kind, backend, seed):
+    _assert_engine_matches_serial(kind, backend, seed, B=3, V=50,
+                                  rounds=4, spec_k=3)
+
+
+@pytest.mark.parametrize("kind,backend", PAIRS)
+def test_engine_bit_exact_single_row(kind, backend):
+    """B=1 (a lone serving slot) and an awkward non-power-of-two vocab."""
+    _assert_engine_matches_serial(kind, backend, seed=7, B=1, V=37,
+                                  rounds=3, spec_k=4)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer: random shapes/seeds per pair
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    pair=st.sampled_from(PAIRS),
+    seed=st.integers(min_value=0, max_value=2**16),
+    B=st.integers(min_value=1, max_value=4),
+    V=st.integers(min_value=4, max_value=64),
+    spec_k=st.integers(min_value=1, max_value=4),
+    rounds=st.integers(min_value=1, max_value=4),
+)
+def test_engine_bit_exact_vs_serial_random(pair, seed, B, V, spec_k, rounds):
+    kind, backend = pair
+    _assert_engine_matches_serial(kind, backend, seed, B, V, rounds, spec_k)
+
+
+# ---------------------------------------------------------------------------
+# per-row parameters (the serving per-slot path) stay on the same walk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_per_row_k_matches_scalar_rows(backend):
+    """(B,) parameter vectors — how per-slot SamplerConfigs enter the
+    engine — give each row the trajectory its scalar solve would."""
+    rng = np.random.default_rng(3)
+    z = jnp.asarray(rng.normal(size=(4, 48)).astype(np.float32))
+    ks = [3, 11, 24, 40]
+    lo_v, hi_v = solver.solve_kind(
+        "count_above", z, k=jnp.asarray(ks, jnp.int32), backend=backend,
+        rounds=4, spec_k=3,
+    )
+    for i, k in enumerate(ks):
+        lo_s, hi_s = solver.solve_kind(
+            "count_above", z[i:i + 1], k=k, backend=backend,
+            rounds=4, spec_k=3,
+        )
+        assert float(lo_v[i]) == float(lo_s[0])
+        assert float(hi_v[i]) == float(hi_s[0])
