@@ -25,6 +25,7 @@ ALL = [
     "sampler_bench",
     "moe_capacity_bench",
     "serving_bench",
+    "scaling_bench",
 ]
 
 

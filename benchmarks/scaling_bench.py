@@ -1,0 +1,172 @@
+"""Device-scaling benchmark for the mesh-native solver engine (DESIGN.md §5).
+
+One subprocess per device count (1/2/4/8 forced host devices — the flag
+must be set before jax touches the backend, hence subprocesses), each
+measuring both engine backends:
+
+  * solver round latency — a batched ``count_above`` solve with the vocab
+    sharded over a (1, d) ("data", "model") mesh: d-way partial counting
+    plus the per-round psum join (the paper's thread-join cost, Fig. 6's
+    collective-overhead regime — on one CPU socket the collective is a
+    memcpy, so expect overhead-dominated numbers, shape only);
+  * serving throughput — the continuous-batching server slot-sharded over
+    a (d, 1) mesh (pure data parallelism; d=1 is the meshless baseline).
+
+Emits ``BENCH_scaling.json`` via the run.py artifact hook.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import row
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+BACKENDS = ("jnp", "pallas")
+
+_PAYLOAD: dict | None = None
+
+_SCRIPT = textwrap.dedent("""
+    import os, sys
+    D = int(sys.argv[1])
+    BACKENDS = sys.argv[2].split(",")
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={D}")
+    import dataclasses, json, time
+    import jax, jax.numpy as jnp
+    from repro.core import solver
+    from repro.launch.mesh import make_mesh_compat
+    from repro.models.testing import reduced_config
+    from repro.models.transformer import init_params
+    from repro.serving.sampler import SamplerConfig
+    from repro.serving.server import Request, RunaheadServer
+
+    B, V, K = 8, 8192, 50
+    ROUNDS, SPEC_K = 6, 4
+    N_SLOTS, N_REQ, PROMPT, NEW = 8, 10, 8, 8
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, V), jnp.float32)
+    mesh_v = make_mesh_compat((1, D), ("data", "model"))
+    mesh_s = make_mesh_compat((D, 1), ("data", "model"))
+
+    cfg = dataclasses.replace(
+        reduced_config("internlm2-1.8b"), n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_head=16, d_ff=64, vocab=512,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+    def timed(fn, reps=5):
+        jax.block_until_ready(fn())
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[len(ts) // 2]
+
+    for backend in BACKENDS:
+        # jit the whole solve so d=1 (plain path, otherwise eager) and
+        # d>1 (already-compiled shard_map) compare compiled-to-compiled;
+        # the policy is read at trace time, closure-static per backend
+        @jax.jit
+        def solve(x=x, backend=backend):
+            with solver.mesh_policy(mesh_v if D > 1 else None):
+                return solver.solve_kind(
+                    "count_above", x, backend=backend, k=K,
+                    rounds=ROUNDS, spec_k=SPEC_K)
+        solver_s = timed(solve)
+
+        reqs = [
+            Request(rid=i, prompt=[(7 * i + j) % cfg.vocab
+                                   for j in range(PROMPT)],
+                    n_new=NEW, seed=100 + i,
+                    sampler=SamplerConfig(top_k=K, backend=backend))
+            for i in range(N_REQ)
+        ]
+        server = RunaheadServer(
+            cfg, params, n_slots=N_SLOTS, context=PROMPT + NEW,
+            backend=backend, mesh=mesh_s if D > 1 else None)
+        t0 = time.perf_counter()
+        for r in reqs:
+            server.submit(r)
+        done = server.drain()
+        wall = time.perf_counter() - t0
+        toks = sum(len(c.tokens) for c in done)
+        print("CELL " + json.dumps({
+            "devices": D, "backend": backend,
+            "solver_round_us": round(1e6 * solver_s / ROUNDS, 1),
+            "solver_solve_us": round(1e6 * solver_s, 1),
+            "serving_wall_s": round(wall, 3),
+            "serving_tok_per_s": round(toks / wall, 2),
+            "decode_steps": server.scheduler.n_decode_steps,
+        }), flush=True)
+""")
+
+
+def run() -> list[str]:
+    global _PAYLOAD
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(here, "src"))
+    env.pop("XLA_FLAGS", None)
+
+    out, results = [], []
+    for d in DEVICE_COUNTS:
+        try:
+            r = subprocess.run(
+                [sys.executable, "-c", _SCRIPT, str(d),
+                 ",".join(BACKENDS)], env=env,
+                capture_output=True, text=True, timeout=560,
+            )
+            stdout, stderr = r.stdout, r.stderr
+        except subprocess.TimeoutExpired as e:
+            stdout, stderr = "", f"timeout after {e.timeout}s"
+        cells = [json.loads(line[len("CELL "):])
+                 for line in stdout.splitlines()
+                 if line.startswith("CELL ")]
+        if not cells:
+            out.append(row(f"scaling/d{d}_FAILED", 0.0,
+                           stderr[-200:].replace(",", ";")
+                           .replace("\n", " ")))
+            continue
+        results.extend(cells)
+        for c in cells:
+            out.append(row(
+                f"scaling/d{d}_{c['backend']}", c["solver_round_us"],
+                f"serve_tok_per_s={c['serving_tok_per_s']};"
+                f"decode_steps={c['decode_steps']}",
+            ))
+
+    _PAYLOAD = {
+        "bench": "scaling",
+        "unit": "solver us per speculative round; serving tok/s",
+        "config": {
+            "device_counts": list(DEVICE_COUNTS),
+            "backends": list(BACKENDS),
+            "solver": {"batch": 8, "vocab": 8192, "k": 50,
+                       "rounds": 6, "spec_k": 4,
+                       "mesh": "(1, d) vocab-sharded"},
+            "serving": {"n_slots": 8, "requests": 10, "prompt_len": 8,
+                        "n_new": 8, "vocab": 512,
+                        "mesh": "(d, 1) slot-sharded"},
+            "note": "forced host devices on one CPU socket: collective "
+                    "cost is real, compute scaling is not — shape only",
+        },
+        "results": results,
+    }
+    return out
+
+
+def json_payload() -> tuple[str, dict] | None:
+    """(filename, payload) for run.py to write; None before run()."""
+    if _PAYLOAD is None:
+        return None
+    return "BENCH_scaling.json", _PAYLOAD
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))
+    print(json.dumps(_PAYLOAD, indent=2))

@@ -29,9 +29,11 @@ from repro.core.paper_functions import (
     PAPER_EPS_CPU,
 )
 from repro.core import applications, solver
-from repro.core.solver import MonotoneProblem
+from repro.core.solver import MeshPolicy, MonotoneProblem, mesh_policy
 
 __all__ = [
+    "MeshPolicy",
+    "mesh_policy",
     "MonotoneProblem",
     "solver",
     "find_root_serial",

@@ -17,6 +17,12 @@ Backends (DESIGN.md §4 — resolved per problem kind by the solver registry):
 
 Every function accepts a single row ``(V,)`` or a batch ``(B, V)`` and
 returns correspondingly unbatched / batched results.
+
+Mesh execution (DESIGN.md §5): under an active ``solver.mesh_policy`` all
+five solves run mesh-native with NO signature change — rows data-parallel
+over the policy's data axes, the operand reduction vocab-sharded over its
+vocab axis with one psum'd sign source per round.  The engine falls back
+to the single-device path per call when nothing about the operand shards.
 """
 from __future__ import annotations
 

@@ -3,21 +3,35 @@
 This is the multicore-substrate form of the paper's scheme on a TPU pod:
 each chip along the ``model`` mesh axis plays the role of a block of helper
 threads, evaluating its shard of the 2**k - 1 speculative points.  The
-paper's shared sign-array becomes ONE tiny ``all_gather`` of sign bits
-(2**k - 1 bools) — this collective latency is the TPU analogue of the
+paper's shared sign-array becomes ONE tiny ``all_gather`` of values
+(2**k - 1 floats) — this collective latency is the TPU analogue of the
 paper's thread-join cost and drives the Fig. 6 crossover benchmark.
+
+Since the mesh-native engine PR this module is a THIN B=1 VIEW of the
+batched solver engine (``repro.core.solver``), exactly the way
+``runahead_solve`` is the engine's B=1 scalar view: the round loop, the
+midpoint tree, and the serial-exact sign walk are the engine's own
+(``_solve_rounds`` with an ``iterations`` budget and last-mid tracking);
+only the point-sharded ``multi_eval`` — slice my chunk, evaluate, gather —
+lives here.
 
 Implementation notes:
   * 2**k - 1 points don't tile evenly over D devices, so the grid is padded
-    with a repeat of the last point (its sign is computed and discarded —
-    the index walk never looks past 2**k - 1).
+    via ``_pad_fill`` (a repeat of the last point); the padded evaluations'
+    signs are computed and DISCARDED — the gathered value vector is
+    truncated to 2**k - 1 before the walk ever looks at it (the uneven-
+    split tests poison the pad to prove it).
   * Every device runs the identical O(k) index walk on the gathered signs,
     so the new interval is consistent everywhere with no broadcast step —
     exactly the paper's "each thread compares its neighbours" symmetry.
+  * The compiled step is CACHED per (f, iterations, spec_k, mesh, axis,
+    dtype): repeated calls re-use one jit(shard_map) instead of rebuilding
+    it around a fresh closure every invocation (the per-call retrace the
+    Fig. 6 chip-level bench used to pay).
 """
 from __future__ import annotations
 
-from functools import partial
+import functools
 from typing import Callable
 
 import jax
@@ -25,7 +39,66 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.bisect import _sign_bit
-from repro.core.runahead import _midpoint_tree, _select_walk
+from repro.core.solver import _solve_rounds, shard_map_compat
+
+
+def _pad_fill(interior: jax.Array, n_fill: int) -> jax.Array:
+    """Pad values for the uneven split: repeats of the last interior point.
+
+    Any value is legal here — the padded signs never reach the walk — so
+    tests monkeypatch this with poison (NaN/inf) to assert the discard.
+    """
+    return jnp.full((n_fill,), interior[-1], interior.dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_sharded_solve(
+    f: Callable[[jax.Array], jax.Array],
+    iterations: int,
+    spec_k: int,
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    dtype: str,
+):
+    """Build (once) the compiled point-sharded solve for this config.
+
+    Keyed on ``f`` BY IDENTITY: reuse one callable across calls (as the
+    benches and tests do) to hit the cache — a fresh closure per call is
+    a miss every time, i.e. exactly the old rebuild-per-call cost, and
+    the evicting cache additionally retains up to 64 stale closures plus
+    whatever arrays they capture.
+    """
+    k = spec_k
+    n_pts = (1 << k) - 1
+    d = mesh.shape[axis]
+    padded = -(-n_pts // d) * d
+
+    def per_device(a, b, sign_lo):
+        # Executed under shard_map: a/b/sign_lo are replicated scalars.
+        idx = jax.lax.axis_index(axis)
+
+        def multi_eval(taus: jax.Array) -> jax.Array:    # (1, 2**k - 1)
+            pts = jnp.concatenate(
+                [taus[0], _pad_fill(taus[0], padded - n_pts)]
+            )
+            my = jax.lax.dynamic_slice(
+                pts, (idx * (padded // d),), (padded // d,)
+            )
+            vals = f(my)                                 # local evals
+            gathered = jax.lax.all_gather(vals, axis, tiled=True)
+            return gathered[:n_pts][None]                # pad discarded
+
+        _, _, lm = _solve_rounds(
+            multi_eval, a[None], b[None],
+            rounds=0, spec_k=k, sign_lo=sign_lo[None],
+            iterations=iterations, return_last_mid=True,
+        )
+        return lm[0]
+
+    shmapped = shard_map_compat(
+        per_device, mesh, in_specs=(P(), P(), P()), out_specs=P()
+    )
+    return jax.jit(shmapped)
 
 
 def find_root_runahead_sharded(
@@ -37,59 +110,16 @@ def find_root_runahead_sharded(
     mesh: jax.sharding.Mesh,
     axis: str = "model",
 ) -> jax.Array:
-    """Runahead bisection with speculative evals sharded over a mesh axis."""
-    k = spec_k
-    n_pts = (1 << k) - 1
-    d = mesh.shape[axis]
-    padded = -(-n_pts // d) * d
-    rounds = -(-iterations // k)
+    """Runahead bisection with speculative evals sharded over a mesh axis.
 
-    def per_device(a, b, sign_lo, last_mid):
-        # Executed under shard_map: a/b/sign_lo are replicated scalars.
-        idx = jax.lax.axis_index(axis)
-
-        def round_body(r, carry):
-            lo, hi, sl, lm = carry
-            grid = _midpoint_tree(lo, hi, k)                  # replicated
-            interior = grid[1:-1]
-            pad = jnp.full((padded - n_pts,), interior[-1], interior.dtype)
-            pts = jnp.concatenate([interior, pad])
-            my = jax.lax.dynamic_slice(pts, (idx * (padded // d),),
-                                       (padded // d,))
-            my_signs = _sign_bit(f(my))                       # local evals
-            signs = jax.lax.all_gather(my_signs, axis, tiled=True)[:n_pts]
-            steps = jnp.minimum(iterations - r * k, k)
-            li, hi_, _, lmi = _select_walk(signs, sl, k, steps)
-            full_signs = jnp.concatenate([sl[None], signs])
-            return grid[li], grid[hi_], full_signs[li], grid[lmi]
-
-        lo, hi, sl, lm = jax.lax.fori_loop(
-            0, rounds, round_body, (a, b, sign_lo, last_mid)
-        )
-        return lm
-
+    A B=1 view of the engine's mesh path: returns the last midpoint
+    examined (Algorithm 1's contract), trajectory-identical to
+    ``find_root_serial(mode="signbit")``.
+    """
     a = jnp.asarray(a)
     b = jnp.asarray(b, dtype=a.dtype)
     sign_lo = _sign_bit(f(a[None])[0])
-
-    # jax.shard_map is top-level only in newer jax; fall back to the
-    # experimental location (same semantics; check_vma spelled check_rep).
-    if hasattr(jax, "shard_map"):
-        shmapped = jax.shard_map(
-            per_device,
-            mesh=mesh,
-            in_specs=(P(), P(), P(), P()),
-            out_specs=P(),
-            check_vma=False,
-        )
-    else:
-        from jax.experimental.shard_map import shard_map as _shard_map
-
-        shmapped = _shard_map(
-            per_device,
-            mesh=mesh,
-            in_specs=(P(), P(), P(), P()),
-            out_specs=P(),
-            check_rep=False,
-        )
-    return jax.jit(shmapped)(a, b, sign_lo, (a + b) / 2)
+    solve = _cached_sharded_solve(
+        f, iterations, spec_k, mesh, axis, str(a.dtype)
+    )
+    return solve(a, b, sign_lo)

@@ -26,20 +26,43 @@ Sign convention (paper §IV.A): the stored bit is '1' iff the value is
 negative; an exact zero counts positive.  The walk only compares bits, so
 monotone non-increasing problems work unchanged — the bracket invariant is
 ``sign(f(lo)) != sign(f(hi))``, not a direction.
+
+Mesh execution (DESIGN.md §5.1): under an active :func:`mesh_policy` the
+engine runs mesh-native — batch rows data-parallel over the policy's data
+axes, the operand's reduction dim sharded over its vocab axis with each
+device partial-reducing its shard and one ``psum`` per round as the
+paper's thread-join.  One ``jit(shard_map)`` per static configuration is
+cached module-wide; ``core/sharded.py`` is the B=1 point-sharded view of
+the same machinery.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import importlib
+import threading
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core.bisect import _sign_bit
 
 Array = jax.Array
 MultiEval = Callable[[Array], Array]          # taus (B, M) -> f values (B, M)
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (top-level only in newer jax;
+    the experimental location spells check_vma as check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,28 +117,41 @@ def _midpoint_tree(lo: Array, hi: Array, k: int) -> Array:
     return grid
 
 
-def _select_walk(signs: Array, sign_lo: Array, k: int):
+def _select_walk(signs: Array, sign_lo: Array, k: int, steps=None):
     """Serial-exact sign walk over (B,) index grids [0, 2**k].
 
     signs[b, i] is the bit of grid point i+1 (interior points only).
-    Returns (lo_idx, hi_idx, sign_lo_new), each (B,).
+    ``steps`` (scalar, <= k) limits the walk to a partial round — the
+    tail iterations of a non-divisible ``iterations`` budget; None walks
+    all k steps.  Returns (lo_idx, hi_idx, sign_lo_new, last_mid_idx),
+    each (B,); last_mid_idx is the last grid index examined (Algorithm
+    1's `root`), initialised to the interval midpoint 2**(k-1).
     """
     n = 1 << k
     batch = signs.shape[0]
 
-    def body(_, st):
-        l, h, sl = st
+    def body(j, st):
+        l, h, sl, lm = st
         mid = (l + h) // 2
         smid = jnp.take_along_axis(signs, (mid - 1)[:, None], axis=1)[:, 0]
         go_left = sl != smid
         new_l = jnp.where(go_left, l, mid)
         new_h = jnp.where(go_left, mid, h)
         new_sl = jnp.where(go_left, sl, smid)
-        return new_l, new_h, new_sl
+        if steps is None:
+            return new_l, new_h, new_sl, mid
+        active = j < steps
+        return (
+            jnp.where(active, new_l, l),
+            jnp.where(active, new_h, h),
+            jnp.where(active, new_sl, sl),
+            jnp.where(active, mid, lm),
+        )
 
     l0 = jnp.zeros((batch,), jnp.int32)
     h0 = jnp.full((batch,), n, jnp.int32)
-    return jax.lax.fori_loop(0, k, body, (l0, h0, sign_lo))
+    lm0 = jnp.full((batch,), n // 2, jnp.int32)
+    return jax.lax.fori_loop(0, k, body, (l0, h0, sign_lo, lm0))
 
 
 def _solve_rounds(
@@ -127,23 +163,41 @@ def _solve_rounds(
     spec_k: int,
     sign_lo: Array | None = None,
     sign_bit: Callable[[Array], Array] = _sign_bit,
-) -> tuple[Array, Array]:
-    """Run `rounds` speculative rounds natively over (B,) problems."""
+    iterations: int | None = None,
+    return_last_mid: bool = False,
+):
+    """Run `rounds` speculative rounds natively over (B,) problems.
+
+    ``iterations`` optionally caps the serial-step budget (the paper's n):
+    rounds become ceil(iterations / spec_k) with a partial walk in the
+    last round — the Algorithm-1-facing contract `find_root_runahead_
+    sharded` needs.  ``return_last_mid`` additionally returns the (B,)
+    last midpoints examined.
+    """
     lo0 = jnp.asarray(lo0)
     hi0 = jnp.asarray(hi0, dtype=lo0.dtype)
+    if iterations is not None:
+        rounds = -(-iterations // spec_k)
     if sign_lo is None:
         sign_lo = sign_bit(multi_eval(lo0[:, None])[:, 0])
 
-    def round_body(_, carry):
-        lo, hi, sl = carry
+    def round_body(r, carry):
+        lo, hi, sl, lm = carry
         grid = _midpoint_tree(lo, hi, spec_k)            # (B, 2**k + 1)
         signs = sign_bit(multi_eval(grid[:, 1:-1]))      # (B, 2**k - 1)
-        li, hi_i, new_sl = _select_walk(signs, sl, spec_k)
+        steps = (None if iterations is None
+                 else jnp.minimum(iterations - r * spec_k, spec_k))
+        li, hi_i, new_sl, lmi = _select_walk(signs, sl, spec_k, steps)
         new_lo = jnp.take_along_axis(grid, li[:, None], axis=1)[:, 0]
         new_hi = jnp.take_along_axis(grid, hi_i[:, None], axis=1)[:, 0]
-        return new_lo, new_hi, new_sl
+        new_lm = jnp.take_along_axis(grid, lmi[:, None], axis=1)[:, 0]
+        return new_lo, new_hi, new_sl, new_lm
 
-    lo, hi, _ = jax.lax.fori_loop(0, rounds, round_body, (lo0, hi0, sign_lo))
+    lo, hi, _, lm = jax.lax.fori_loop(
+        0, rounds, round_body, (lo0, hi0, sign_lo, (lo0 + hi0) / 2)
+    )
+    if return_last_mid:
+        return lo, hi, lm
     return lo, hi
 
 
@@ -172,11 +226,74 @@ def solve(
 
 
 # ---------------------------------------------------------------------------
+# mesh execution policy (DESIGN.md §5): the engine's chip-level form
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshPolicy:
+    """How the engine maps a batch of solves onto a device mesh.
+
+    vocab_axis: mesh axis sharding the operand's reduction (vocab) dim —
+        each device evaluates every candidate against its vocab shard and
+        partial-reduces locally; one psum per round plays the paper's
+        thread-join.  None disables vocab sharding.
+    data_axes:  mesh axes sharding the batch/slot dim (rows are
+        independent solves — pure data parallelism).  None derives every
+        mesh axis except ``vocab_axis``, in mesh order.
+
+    Hashable (mesh + axis names), so a policy can ride jit static args —
+    which it MUST: the active policy is read at trace time, so any outer
+    jit has to key its cache on the policy (see serving/scheduler.py).
+    """
+
+    mesh: jax.sharding.Mesh
+    vocab_axis: str | None = "model"
+    data_axes: tuple[str, ...] | None = None
+
+    def __post_init__(self):
+        if self.data_axes is None:
+            object.__setattr__(
+                self, "data_axes",
+                tuple(a for a in self.mesh.axis_names
+                      if a != self.vocab_axis),
+            )
+
+
+_policy_state = threading.local()
+
+
+def current_policy() -> MeshPolicy | None:
+    return getattr(_policy_state, "policy", None)
+
+
+@contextlib.contextmanager
+def mesh_policy(policy: MeshPolicy | jax.sharding.Mesh | None, **kw):
+    """Activate a MeshPolicy (or build one from a mesh) for the enclosed
+    trace; ``None`` is a no-op so callers can pass an optional mesh
+    straight through."""
+    if policy is not None and not isinstance(policy, MeshPolicy):
+        policy = MeshPolicy(policy, **kw)
+    prev = current_policy()
+    _policy_state.policy = policy
+    try:
+        yield policy
+    finally:
+        _policy_state.policy = prev
+
+
+# ---------------------------------------------------------------------------
 # backend registry
 # ---------------------------------------------------------------------------
 
 # (kind, backend) -> factory(operand, **params) -> MonotoneProblem
 _REGISTRY: dict[tuple[str, str], Callable[..., MonotoneProblem]] = {}
+
+# (kind, backend) -> factory(local_operand, *, vocab_axis, global_v,
+#                            **params) -> MonotoneProblem
+# Runs INSIDE shard_map on the device-local vocab shard: multi_eval must
+# partial-reduce locally and psum over `vocab_axis`; bracket inits must
+# pmin/pmax so every device agrees on the global bracket bit-for-bit.
+_SHARDED_REGISTRY: dict[tuple[str, str], Callable[..., MonotoneProblem]] = {}
 
 # Backends whose factories live outside core/ register themselves on first
 # use (keeps core free of kernel imports; kernels import core, never the
@@ -189,6 +306,16 @@ def register(kind: str, backend: str):
 
     def deco(factory: Callable[..., MonotoneProblem]):
         _REGISTRY[(kind, backend)] = factory
+        return factory
+
+    return deco
+
+
+def register_sharded(kind: str, backend: str):
+    """Decorator: register a vocab-sharded factory for (kind, backend)."""
+
+    def deco(factory: Callable[..., MonotoneProblem]):
+        _SHARDED_REGISTRY[(kind, backend)] = factory
         return factory
 
     return deco
@@ -220,11 +347,148 @@ def solve_kind(
     spec_k: int,
     **params,
 ) -> tuple[Array, Array]:
-    """problem() + solve() in one call — the applications' entry point."""
+    """problem() + solve() in one call — the applications' entry point.
+
+    Under an active :func:`mesh_policy` the solve runs mesh-native
+    (vocab-sharded partial reductions + data-parallel rows, one psum'd
+    sign source per round) with NO caller-visible signature change; when
+    nothing about the operand is shardable it falls back to the plain
+    single-device path.
+    """
+    policy = current_policy()
+    if policy is not None:
+        out = _solve_kind_sharded(
+            policy, kind, jnp.asarray(operand), backend=backend,
+            rounds=rounds, spec_k=spec_k, **params,
+        )
+        if out is not None:
+            return out
     return solve(
         problem(kind, operand, backend=backend, **params),
         rounds=rounds,
         spec_k=spec_k,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the mesh-native solve path
+# ---------------------------------------------------------------------------
+#
+# One compiled shard_map per static configuration, cached module-wide the
+# way serving/scheduler.py::_scheduler_step is (PR 2) — repeated solves
+# re-use the compiled step instead of rebuilding jit(shard_map) around a
+# fresh closure every call (the core/sharded.py retrace bug this PR
+# retires).
+
+_SHARDED_SOLVE_CACHE: dict[tuple, Callable] = {}
+_SHARDED_SOLVE_CACHE_MAX = 128     # FIFO-evicted; mirrors sharded.py's 64
+
+
+def _static_param(v) -> bool:
+    """Python scalars stay static (they select known-sign fast paths and
+    key the compile cache); arrays/tracers ride in as sharded operands."""
+    return v is None or isinstance(v, (bool, int, float, str))
+
+
+def _solve_kind_sharded(
+    policy: MeshPolicy,
+    kind: str,
+    operand: Array,
+    *,
+    backend: str,
+    rounds: int,
+    spec_k: int,
+    **params,
+):
+    """Mesh-native solve_kind; None when the policy cannot shard anything.
+
+    The operand's batch dim shards over the policy's data axes (dropped
+    when it does not divide) and its reduction dim over ``vocab_axis``
+    (dropped likewise).  With vocab sharded, the per-device problem comes
+    from the _SHARDED_REGISTRY (local partial reduce + psum join); with
+    vocab replicated the ordinary factory runs on the local batch shard —
+    including whole-solve fused kernels, which stay legal because each
+    device then holds full rows.
+    """
+    if operand.ndim != 2:
+        return None
+    mesh = policy.mesh
+    b, v = operand.shape
+
+    va = policy.vocab_axis
+    if va is not None and (va not in mesh.axis_names
+                           or mesh.shape[va] <= 1 or v % mesh.shape[va]):
+        va = None
+    data = tuple(a for a in policy.data_axes if a in mesh.axis_names)
+    d_size = 1
+    for a in data:
+        d_size *= mesh.shape[a]
+    if d_size <= 1 or b % d_size:
+        data = ()
+    if va is None and not data:
+        return None
+
+    statics = {k: p for k, p in params.items() if _static_param(p)}
+    arrays = {k: jnp.asarray(p) for k, p in params.items()
+              if k not in statics}
+    arr_names = tuple(sorted(arrays))
+    key = (
+        mesh, kind, backend, rounds, spec_k, va, data,
+        b, v, str(operand.dtype),
+        tuple(sorted(statics.items())),
+        tuple((n, arrays[n].shape, str(arrays[n].dtype))
+              for n in arr_names),
+    )
+    fn = _SHARDED_SOLVE_CACHE.get(key)
+    if fn is None:
+        fn = _build_sharded_solve(
+            mesh, kind, backend, rounds, spec_k, va, data, v,
+            statics, arr_names,
+            tuple(arrays[n].ndim for n in arr_names),
+        )
+        while len(_SHARDED_SOLVE_CACHE) >= _SHARDED_SOLVE_CACHE_MAX:
+            _SHARDED_SOLVE_CACHE.pop(next(iter(_SHARDED_SOLVE_CACHE)))
+        _SHARDED_SOLVE_CACHE[key] = fn
+    return fn(operand, *(arrays[n] for n in arr_names))
+
+
+def _build_sharded_solve(mesh, kind, backend, rounds, spec_k, va, data,
+                         global_v, statics, arr_names, arr_ndims):
+    module = _LAZY_BACKEND_MODULES.get(backend)
+    if module is not None:
+        importlib.import_module(module)
+    data_spec = data if data else None
+
+    def per_device(op_local, *arrs):
+        kw = dict(statics)
+        kw.update(zip(arr_names, arrs))
+        if va is None:
+            # pure data parallelism: full rows per device, fused
+            # whole-solve hooks stay available on the local batch shard
+            return solve(
+                _REGISTRY[(kind, backend)](op_local, **kw),
+                rounds=rounds, spec_k=spec_k,
+            )
+        try:
+            factory = _SHARDED_REGISTRY[(kind, backend)]
+        except KeyError:
+            raise KeyError(
+                f"no SHARDED solver backend {backend!r} for kind "
+                f"{kind!r}; registered: {sorted(_SHARDED_REGISTRY)}"
+            ) from None
+        prob = factory(op_local, vocab_axis=va, global_v=global_v, **kw)
+        return _solve_rounds(
+            prob.multi_eval, prob.lo0, prob.hi0,
+            rounds=rounds, spec_k=spec_k,
+            sign_lo=prob.sign_lo, sign_bit=prob.sign_bit,
+        )
+
+    # 0-d params replicate; (B,) per-row params shard with the batch
+    in_specs = ((P(data_spec, va),)
+                + tuple(P(data_spec) if nd else P() for nd in arr_ndims))
+    out_specs = (P(data_spec), P(data_spec))
+    return jax.jit(
+        shard_map_compat(per_device, mesh, in_specs, out_specs)
     )
 
 
@@ -325,6 +589,107 @@ def _entropy_jnp(
         return target_col - h
 
     return MonotoneProblem(multi_eval, lo0, hi0)
+
+
+# ---------------------------------------------------------------------------
+# "jnp" vocab-sharded evaluators — run per device under shard_map
+# ---------------------------------------------------------------------------
+#
+# Each mirrors its oracle above on the LOCAL vocab shard: the reduction
+# over the vocab becomes a local partial sum + one `psum` over the policy's
+# vocab axis (the paper's thread-join, now a collective), and bracket
+# init pmin/pmaxes so every device in the vocab group agrees bit-for-bit.
+# Count partials are small integers — psum is order-invariant, so the
+# count kinds stay BIT-exact vs the unsharded oracle; mass/entropy psums
+# reassociate float sums, which can only flip a walk decision when f sits
+# within rounding noise of zero at a candidate (the sign walk consumes
+# nothing but signs, so brackets — and downstream sampled tokens — are
+# bit-identical whenever no candidate lands on such a knife edge; the
+# subprocess harness in tests/test_sharded_serving.py pins this).
+
+@register_sharded("count_above", "jnp")
+def _count_above_jnp_sharded(
+    local: Array, *, vocab_axis: str, global_v: int, k
+) -> MonotoneProblem:
+    x = local.astype(jnp.float32)
+    lo0 = jax.lax.pmin(jnp.min(x, axis=-1), vocab_axis) - 1.0
+    hi0 = jax.lax.pmax(jnp.max(x, axis=-1), vocab_axis) + 1.0
+    k_col = _param_col(k)
+
+    def multi_eval(taus: Array) -> Array:
+        counts = jnp.sum(x[:, None, :] > taus[:, :, None], axis=-1)
+        counts = jax.lax.psum(counts.astype(jnp.float32), vocab_axis)
+        return k_col - counts
+
+    sign_lo = _known_negative_sign_lo(
+        x.shape[0], isinstance(k, int) and k < global_v
+    )
+    return MonotoneProblem(multi_eval, lo0, hi0, sign_lo=sign_lo)
+
+
+@register_sharded("mass_at_or_above", "jnp")
+def _mass_jnp_sharded(
+    local: Array, *, vocab_axis: str, global_v: int, p
+) -> MonotoneProblem:
+    probs = local
+    lo0 = jnp.zeros(probs.shape[:-1], probs.dtype)
+    hi0 = (jax.lax.pmax(jnp.max(probs, axis=-1), vocab_axis)
+           + jnp.asarray(1e-6, probs.dtype))
+    p_col = _param_col(p, probs.dtype)
+
+    def multi_eval(taus: Array) -> Array:
+        keep = probs[:, None, :] >= taus[:, :, None]
+        mass = jnp.sum(jnp.where(keep, probs[:, None, :], 0.0), axis=-1)
+        return p_col - jax.lax.psum(mass, vocab_axis)
+
+    return MonotoneProblem(multi_eval, lo0, hi0)
+
+
+@register_sharded("entropy_at_temperature", "jnp")
+def _entropy_jnp_sharded(
+    local: Array, *, vocab_axis: str, global_v: int, target,
+    t_lo: float = 0.05, t_hi: float = 20.0,
+) -> MonotoneProblem:
+    z = local.astype(jnp.float32)
+    batch = z.shape[0]
+    lo0 = jnp.full((batch,), t_lo, jnp.float32)
+    hi0 = jnp.full((batch,), t_hi, jnp.float32)
+    target_col = _param_col(target)
+
+    def multi_eval(ts: Array) -> Array:
+        zt = z[:, None, :] / ts[:, :, None]                 # (B, M, Vloc)
+        m = jax.lax.pmax(jnp.max(zt, axis=-1), vocab_axis)  # (B, M) global
+        se = jax.lax.psum(
+            jnp.sum(jnp.exp(zt - m[..., None]), axis=-1), vocab_axis
+        )
+        lse = m + jnp.log(se)
+        logp = zt - lse[..., None]
+        h = -jax.lax.psum(
+            jnp.sum(jnp.exp(logp) * logp, axis=-1), vocab_axis
+        )
+        return target_col - h
+
+    return MonotoneProblem(multi_eval, lo0, hi0)
+
+
+@register_sharded("count_below", "jnp")
+def _count_below_jnp_sharded(
+    local: Array, *, vocab_axis: str, global_v: int, q
+) -> MonotoneProblem:
+    x = local.astype(jnp.float32)
+    lo0 = jax.lax.pmin(jnp.min(x, axis=-1), vocab_axis) - 1.0
+    hi0 = jax.lax.pmax(jnp.max(x, axis=-1), vocab_axis) + 1.0
+    q_col = _param_col(q)
+
+    def multi_eval(cs: Array) -> Array:
+        below = jnp.sum(x[:, None, :] < cs[:, :, None], axis=-1)
+        below = jax.lax.psum(below.astype(jnp.float32), vocab_axis)
+        return below / global_v - q_col
+
+    sign_lo = _known_negative_sign_lo(
+        x.shape[0], isinstance(q, float) and q > 0
+    )
+    return MonotoneProblem(multi_eval, lo0, hi0, sign_lo=sign_lo)
 
 
 @register("count_below", "jnp")

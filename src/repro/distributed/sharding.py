@@ -39,6 +39,9 @@ TRAIN_RULES: dict[str, object] = {
     "vocab": "model",
     "expert": "model",
     "expert_ffn": None,
+    # the mesh-native solver engine (core/solver.py MeshPolicy):
+    "slot": ("pod", "data"),   # serving decode lanes / engine batch rows
+    "solver_vocab": "model",   # the solve's reduction dim (vocab / norms)
 }
 
 SERVE_RULES: dict[str, object] = dict(TRAIN_RULES)
@@ -94,6 +97,20 @@ def logical_axis_size(logical: str) -> int:
 def logical_sharding(mesh, rules, *logical_axes) -> NamedSharding:
     spec = P(*(_mesh_axes(mesh, rules.get(a)) for a in logical_axes))
     return NamedSharding(mesh, spec)
+
+
+def resolve_axes(mesh: jax.sharding.Mesh, rules: Mapping[str, object],
+                 logical: str):
+    """Mesh axis (name, tuple of names, or None) a logical axis maps to on
+    THIS mesh — rule entries naming absent axes dropped.  The serving
+    scheduler uses this to place slot state and build the solver's
+    MeshPolicy from the same SERVE_RULES the model annotations use."""
+    return _mesh_axes(mesh, rules.get(logical))
+
+
+def resolved_axis_size(mesh: jax.sharding.Mesh, axes) -> int:
+    """Device count behind a resolve_axes() result (1 for None)."""
+    return _axis_size(mesh, axes)
 
 
 def _axis_size(mesh: jax.sharding.Mesh, spec) -> int:

@@ -54,20 +54,24 @@ def _kernel(z_ref, ts_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def multi_entropy(
-    logits: jax.Array, ts: jax.Array, *, interpret: bool = False
+def multi_entropy_moments(
+    z_shifted: jax.Array, ts: jax.Array, *, interpret: bool = False
 ):
-    """H[b, m] = entropy of softmax(logits[b] / ts[b, m]).
+    """The kernel's raw accumulator pair for PRE-SHIFTED logits.
 
-    logits: (B, V) float32;  ts: (B, M) float32 (positive)  ->  (B, M) f32.
+    z_shifted: (B, V) f32 with every element <= 0 (caller subtracts a row
+    max — the LOCAL max in the single-device wrapper below, the pmax'd
+    GLOBAL max in the vocab-sharded solver backend, which psums the
+    returned partials across shards before finalising H).
+    Returns (s, w), each (B, M): s[m] = sum_v exp(z_v / T_m),
+    w[m] = sum_v (z_v / T_m) exp(z_v / T_m).
     """
-    B, V = logits.shape
+    B, V = z_shifted.shape
     _, M = ts.shape
     m_pad = -(-M // LANE) * LANE
     v_pad = -(-V // BLOCK_V) * BLOCK_V
-    z = logits.astype(jnp.float32)
-    z = z - jnp.max(z, axis=-1, keepdims=True)
-    z_p = jnp.pad(z, ((0, 0), (0, v_pad - V)), constant_values=_PAD_SENTINEL)
+    z_p = jnp.pad(z_shifted.astype(jnp.float32), ((0, 0), (0, v_pad - V)),
+                  constant_values=_PAD_SENTINEL)
     ts_p = jnp.pad(ts, ((0, 0), (0, m_pad - M)), constant_values=1.0)
 
     acc = pl.pallas_call(
@@ -81,6 +85,18 @@ def multi_entropy(
         out_shape=jax.ShapeDtypeStruct((B, 2, m_pad), jnp.float32),
         interpret=interpret,
     )(z_p, ts_p)
-    s = acc[:, 0, :M]
-    w = acc[:, 1, :M]
+    return acc[:, 0, :M], acc[:, 1, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def multi_entropy(
+    logits: jax.Array, ts: jax.Array, *, interpret: bool = False
+):
+    """H[b, m] = entropy of softmax(logits[b] / ts[b, m]).
+
+    logits: (B, V) float32;  ts: (B, M) float32 (positive)  ->  (B, M) f32.
+    """
+    z = logits.astype(jnp.float32)
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    s, w = multi_entropy_moments(z, ts, interpret=interpret)
     return jnp.log(s) - w / s

@@ -34,6 +34,13 @@ def multi_entropy(logits: jax.Array, ts: jax.Array) -> jax.Array:
     return _me.multi_entropy(logits, ts, interpret=_interpret())
 
 
+def multi_entropy_moments(z_shifted: jax.Array, ts: jax.Array):
+    """Raw (normaliser, expectation) accumulator pair for PRE-SHIFTED
+    logits — the vocab-sharded solver backend psums these partials
+    across shards before finalising H (DESIGN.md §5)."""
+    return _me.multi_entropy_moments(z_shifted, ts, interpret=_interpret())
+
+
 def runahead_topk_threshold(
     logits: jax.Array, *, k_target: int, rounds: int = 8, spec_k: int = 5
 ):

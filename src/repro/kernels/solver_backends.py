@@ -103,3 +103,107 @@ def _count_below_pallas(operand: Array, *, q) -> MonotoneProblem:
     return dataclasses.replace(
         _from_jnp("count_below", operand, q=q), multi_eval=multi_eval
     )
+
+
+# ---------------------------------------------------------------------------
+# vocab-sharded pallas evaluators — run per shard under shard_map
+# ---------------------------------------------------------------------------
+#
+# Under the engine's mesh policy (core/solver.py) each device holds a
+# vocab SHARD, so the kernels run on the local slice and the partial
+# reductions join in one `psum` over the policy's vocab axis — the same
+# structure as the jnp sharded oracles, with the tiled-VMEM kernels doing
+# the local pass.  Exactly as in the unsharded registrations, each factory
+# builds the jnp SHARDED problem and swaps only the evaluator, so bracket
+# init (pmin/pmax'd) and sign semantics cannot drift between backends.
+#
+# The fused whole-solve top-k kernel (runahead_topk_threshold) keeps all
+# rounds inside one pallas program — no collectives can interleave — so
+# it only applies when the vocab axis is UNSHARDED: the engine then runs
+# the plain factory per data shard (full rows VMEM-resident on the local
+# shard) and this module never sees the call.
+
+def _from_jnp_sharded(kind: str, local: Array, *, vocab_axis, global_v,
+                      **params) -> MonotoneProblem:
+    return solver._SHARDED_REGISTRY[(kind, "jnp")](
+        local, vocab_axis=vocab_axis, global_v=global_v, **params
+    )
+
+
+@solver.register_sharded("count_above", "pallas")
+def _count_above_pallas_sharded(
+    local: Array, *, vocab_axis: str, global_v: int, k
+) -> MonotoneProblem:
+    x = local.astype(jnp.float32)
+    k_col = _param_col(k)
+
+    def multi_eval(taus: Array) -> Array:
+        counts = jax.lax.psum(ops.multi_count(x, taus), vocab_axis)
+        return k_col - counts
+
+    return dataclasses.replace(
+        _from_jnp_sharded("count_above", local, vocab_axis=vocab_axis,
+                          global_v=global_v, k=k),
+        multi_eval=multi_eval,
+    )
+
+
+@solver.register_sharded("mass_at_or_above", "pallas")
+def _mass_pallas_sharded(
+    local: Array, *, vocab_axis: str, global_v: int, p
+) -> MonotoneProblem:
+    probs = local.astype(jnp.float32)
+    p_col = _param_col(p, probs.dtype)
+
+    def multi_eval(taus: Array) -> Array:
+        mass = jax.lax.psum(ops.multi_mass(probs, taus), vocab_axis)
+        return p_col - mass
+
+    return dataclasses.replace(
+        _from_jnp_sharded("mass_at_or_above", probs, vocab_axis=vocab_axis,
+                          global_v=global_v, p=p),
+        multi_eval=multi_eval,
+    )
+
+
+@solver.register_sharded("entropy_at_temperature", "pallas")
+def _entropy_pallas_sharded(
+    local: Array, *, vocab_axis: str, global_v: int, target, **bracket
+) -> MonotoneProblem:
+    z = local.astype(jnp.float32)
+    target_col = _param_col(target)
+    # shift by the GLOBAL row max so every kernel exp argument is <= 0 on
+    # every shard (H is shift-invariant; the kernel requires the bound)
+    z_shifted = z - jax.lax.pmax(jnp.max(z, axis=-1), vocab_axis)[:, None]
+
+    def multi_eval(ts: Array) -> Array:
+        s_loc, w_loc = ops.multi_entropy_moments(z_shifted, ts)
+        s = jax.lax.psum(s_loc, vocab_axis)
+        w = jax.lax.psum(w_loc, vocab_axis)
+        return target_col - (jnp.log(s) - w / s)
+
+    return dataclasses.replace(
+        _from_jnp_sharded("entropy_at_temperature", z,
+                          vocab_axis=vocab_axis, global_v=global_v,
+                          target=target, **bracket),
+        multi_eval=multi_eval,
+    )
+
+
+@solver.register_sharded("count_below", "pallas")
+def _count_below_pallas_sharded(
+    local: Array, *, vocab_axis: str, global_v: int, q
+) -> MonotoneProblem:
+    x = local.astype(jnp.float32)
+    neg_x = -x
+    q_col = _param_col(q)
+
+    def multi_eval(cs: Array) -> Array:
+        below = jax.lax.psum(ops.multi_count(neg_x, -cs), vocab_axis)
+        return below / global_v - q_col
+
+    return dataclasses.replace(
+        _from_jnp_sharded("count_below", local, vocab_axis=vocab_axis,
+                          global_v=global_v, q=q),
+        multi_eval=multi_eval,
+    )

@@ -17,6 +17,25 @@ def make_mesh_compat(shape, axes) -> jax.sharding.Mesh:
     )
 
 
+def parse_mesh(spec: str) -> jax.sharding.Mesh:
+    """CLI mesh spec -> Mesh: 'DxM' = (data, model), 'PxDxM' adds pods.
+
+    '2x4' is 2-way data parallel (slot sharding in serving) x 4-way model
+    parallel (solver vocab sharding); CPU testing reaches D*M devices via
+    --xla_force_host_platform_device_count (launch/serve.py
+    --host-devices).
+    """
+    try:
+        dims = tuple(int(s) for s in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"bad mesh spec {spec!r}; want e.g. '2x4'") from None
+    if len(dims) == 2:
+        return make_mesh_compat(dims, ("data", "model"))
+    if len(dims) == 3:
+        return make_mesh_compat(dims, ("pod", "data", "model"))
+    raise ValueError(f"mesh spec {spec!r} must have 2 or 3 dims")
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """Single pod: 16x16 = 256 chips (data, model).
     Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""

@@ -12,11 +12,21 @@ per-request token streams are identical to one-shot, see DESIGN.md §9):
   PYTHONPATH=src python -m repro.launch.serve \
       --arch qwen3-4b --reduced --continuous --requests 12 --slots 4 \
       --prompt-len 16 --new-tokens 32 --backend jnp
+
+Mesh-native continuous serving (DESIGN.md §5): slots shard over `data`,
+sampler solves vocab-shard over `model`, token streams bit-identical to
+the single-device path.  `--host-devices` forces CPU host devices (set
+BEFORE jax touches the backend) so a laptop can exercise the mesh:
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --arch qwen3-4b --reduced --continuous --mesh 2x4 --host-devices 8 \
+      --requests 12 --slots 4
 """
 from __future__ import annotations
 
 import argparse
 import logging
+import os
 import time
 
 import jax
@@ -52,15 +62,18 @@ def _run_oneshot(cfg, params, args, sc, key):
     return toks
 
 
-def _run_continuous(cfg, params, args, sc):
+def _run_continuous(cfg, params, args, sc, mesh=None):
     if cfg.is_encdec:
         raise SystemExit("--continuous does not drive enc-dec archs yet")
     rng = np.random.default_rng(args.seed)
     context = args.prompt_len + args.new_tokens
     server = RunaheadServer(
         cfg, params, n_slots=args.slots, context=context,
-        spec_k=sc.spec_k, rounds=sc.rounds, backend=sc.backend,
+        spec_k=sc.spec_k, rounds=sc.rounds, backend=sc.backend, mesh=mesh,
     )
+    if mesh is not None:
+        log.info("mesh-native serving over %s",
+                 dict(zip(mesh.axis_names, mesh.devices.shape)))
     requests = [
         Request(
             rid=i,
@@ -118,7 +131,28 @@ def main(argv=None):
                     help="[continuous] decode slot pool size")
     ap.add_argument("--arrival-burst", type=int, default=2,
                     help="[continuous] requests arriving per decode step")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="[continuous] device mesh, e.g. 2x4 = 2-way slot "
+                         "data-parallel x 4-way solver vocab sharding")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N CPU host devices (testing; must run "
+                         "before jax first touches the backend)")
     args = ap.parse_args(argv)
+
+    if args.host_devices:
+        # honored only if the backend is still uninitialised — this is
+        # why the flag lives here and not after model init
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}"
+        )
+    mesh = None
+    if args.mesh is not None:
+        if not args.continuous:
+            raise SystemExit("--mesh requires --continuous")
+        from repro.launch.mesh import parse_mesh
+
+        mesh = parse_mesh(args.mesh)
 
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
@@ -133,7 +167,7 @@ def main(argv=None):
         backend=args.backend,
     )
     if args.continuous:
-        return _run_continuous(cfg, params, args, sc)
+        return _run_continuous(cfg, params, args, sc, mesh)
     return _run_oneshot(cfg, params, args, sc, key)
 
 

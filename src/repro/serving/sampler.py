@@ -18,7 +18,12 @@ three solves (DESIGN.md §4): "jnp" is the broadcast-compare-reduce oracle;
 top-k additionally through the fully fused multi-round kernel that keeps
 each logits row VMEM-resident across ALL rounds (one HBM pass total).
 This module holds NO solve logic of its own: it only phrases sampling as
-engine problems via repro.core.applications.
+engine problems via repro.core.applications.  That is what makes serving
+mesh-native for free (DESIGN.md §5.1): under the scheduler's active
+``solver.mesh_policy`` every solve below — including the per-slot (B,)
+parameter columns — runs vocab-sharded and slot-data-parallel with no
+change here, and the per-row threefry streams (drawn OUTSIDE the solves)
+keep continuous serving bit-identical to the single-device path.
 """
 from __future__ import annotations
 

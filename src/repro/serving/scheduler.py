@@ -34,7 +34,14 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import solver
+from repro.distributed.sharding import (
+    SERVE_RULES,
+    resolve_axes,
+    resolved_axis_size,
+)
 from repro.models.config import ModelConfig
 from repro.models.decode import decode_step, init_cache, prefill_into_slot
 from repro.serving.sampler import (
@@ -42,6 +49,43 @@ from repro.serving.sampler import (
     SlotSamplers,
     sample_slots,
 )
+
+
+def slot_policy(mesh: jax.sharding.Mesh, n_slots: int):
+    """(MeshPolicy, slot_axes) for a serving mesh, from SERVE_RULES.
+
+    slot_axes shard the fixed slot pool over the data axes (None —
+    replicated state — when n_slots doesn't divide them); the policy
+    vocab-shards every sampler solve over `solver_vocab` (the engine
+    itself falls back per-solve when the vocab doesn't divide).
+    """
+    slot_axes = resolve_axes(mesh, SERVE_RULES, "slot")
+    if slot_axes is not None and n_slots % resolved_axis_size(
+            mesh, slot_axes):
+        slot_axes = None
+    vocab_axis = resolve_axes(mesh, SERVE_RULES, "solver_vocab")
+    policy = solver.MeshPolicy(mesh, vocab_axis=vocab_axis)
+    return policy, slot_axes
+
+
+def _shard_slot_state(mesh, slot_axes, token, pos, keys, cache):
+    """Place slot-major device state: (B, ...) vectors on the slot axes,
+    cache leaves (layers, B, ...) likewise on dim 1."""
+    vec = NamedSharding(mesh, P(slot_axes))
+    token = jax.device_put(token, vec)
+    pos = jax.device_put(pos, vec)
+    keys = jax.device_put(keys, NamedSharding(mesh, P(slot_axes, None)))
+    cache = jax.tree_util.tree_map(
+        lambda leaf: jax.device_put(
+            leaf,
+            NamedSharding(
+                mesh, P(None, slot_axes, *(None,) * (leaf.ndim - 2))
+                if leaf.ndim >= 2 else P()
+            ),
+        ),
+        cache,
+    )
+    return token, pos, keys, cache
 
 
 @dataclasses.dataclass
@@ -119,11 +163,12 @@ def _admit_sample(logits, keys, slots, *, spec_k, rounds, backend, enable,
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "spec_k", "rounds", "backend", "enable",
-                     "top_k_static"),
+                     "top_k_static", "policy"),
     donate_argnames=("token", "pos", "keys", "cache"),
 )
 def _scheduler_step(params, token, pos, keys, active, cache, slots, *,
-                    cfg, spec_k, rounds, backend, enable, top_k_static):
+                    cfg, spec_k, rounds, backend, enable, top_k_static,
+                    policy=None):
     """THE compiled continuous-batching decode step (module-level so the
     jit cache is shared by every scheduler instance in the process).
 
@@ -132,13 +177,21 @@ def _scheduler_step(params, token, pos, keys, active, cache, slots, *,
     axis; inactive slots are masked to keep their state frozen.  The big
     inputs are donated so XLA updates the KV cache in place instead of
     copying it every token (donation is a no-op on CPU test runs).
+
+    ``policy`` (a hashable MeshPolicy, static BECAUSE the active solver
+    policy is read at trace time) makes the step mesh-native: slot state
+    arrives data-sharded, the decode forward stays row-independent under
+    GSPMD batch partitioning, and every sampler solve runs through the
+    engine's vocab-sharded shard_map path — token streams bit-identical
+    to the single-device step (tests/test_sharded_serving.py).
     """
     logits, new_cache = decode_step(cfg, params, token, pos, cache)
     ks = jax.vmap(jax.random.split)(keys)                   # (B, 2, 2)
     new_keys = jnp.where(active[:, None], ks[:, 0], keys)
-    nxt = sample_slots(logits, ks[:, 1], slots, spec_k=spec_k,
-                       rounds=rounds, backend=backend, enable=enable,
-                       top_k_static=top_k_static)
+    with solver.mesh_policy(policy):
+        nxt = sample_slots(logits, ks[:, 1], slots, spec_k=spec_k,
+                           rounds=rounds, backend=backend, enable=enable,
+                           top_k_static=top_k_static)
     new_token = jnp.where(active, nxt, token)
     new_pos = jnp.where(active, pos + 1, pos)
     return new_token, new_pos, new_keys, new_cache, nxt
@@ -153,6 +206,12 @@ class ContinuousScheduler:
     instances — slot occupancy, positions, and per-slot sampler values
     are all traced data, never recompile triggers.  Prompt-length changes
     recompile the admission prefill only, never the step.
+
+    ``mesh`` makes serving mesh-native: slot state shards over the data
+    axes (SERVE_RULES "slot"), sampler solves vocab-shard over
+    "solver_vocab" via the engine's MeshPolicy, and per-request token
+    streams stay bit-identical to the single-device path (the policy is
+    part of the compiled step's static key).
     """
 
     def __init__(
@@ -166,6 +225,7 @@ class ContinuousScheduler:
         rounds: int = 8,
         backend: str = "jnp",
         cache_dtype=jnp.bfloat16,
+        mesh: jax.sharding.Mesh | None = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -173,11 +233,19 @@ class ContinuousScheduler:
         self.context = context
         self.spec_k, self.rounds, self.backend = spec_k, rounds, backend
         self.cache_dtype = cache_dtype
+        self.mesh = mesh
 
         self.cache = init_cache(cfg, n_slots, context, cache_dtype)
         self.token = jnp.zeros((n_slots,), jnp.int32)
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
+        self._policy = None
+        if mesh is not None:
+            self._policy, slot_axes = slot_policy(mesh, n_slots)
+            self.token, self.pos, self.keys, self.cache = (
+                _shard_slot_state(mesh, slot_axes, self.token, self.pos,
+                                  self.keys, self.cache)
+            )
         self.slots: list[_SlotInfo | None] = [None] * n_slots
         self._finished: list[FinishedRequest] = []
         self._step_args = None           # (slots_arr, active, enable, k)
@@ -292,6 +360,7 @@ class ContinuousScheduler:
             self.cache, slots_arr,
             cfg=self.cfg, spec_k=self.spec_k, rounds=self.rounds,
             backend=self.backend, enable=enable, top_k_static=top_k_static,
+            policy=self._policy,
         )
         self.n_decode_steps += 1
 

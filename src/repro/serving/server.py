@@ -75,10 +75,11 @@ class RunaheadServer:
         spec_k: int = 5,
         rounds: int = 8,
         backend: str = "jnp",
+        mesh: jax.sharding.Mesh | None = None,
     ):
         self.scheduler = ContinuousScheduler(
             cfg, params, n_slots=n_slots, context=context,
-            spec_k=spec_k, rounds=rounds, backend=backend,
+            spec_k=spec_k, rounds=rounds, backend=backend, mesh=mesh,
         )
         self._pending: deque[Request] = deque()
         self._meta: dict[Any, tuple[int, int, float]] = {}   # rid -> meta

@@ -1,0 +1,143 @@
+"""Sharded-vs-unsharded BIT-exactness of the mesh-native solver engine and
+the continuous-batching serving stack (DESIGN.md §5).
+
+Runs in SUBPROCESSES with 8 forced host devices (the forced-device flag
+must never leak into this pytest process).  Two layers:
+
+  * engine: all four solver kinds, both backends, scalar AND per-row
+    traced parameters — final (lo, hi) brackets under a (2 data, 4 model)
+    mesh policy must equal the single-device solve bit-for-bit (the sign
+    walk consumes signs only, so brackets are grid points whose exactness
+    survives the float psum reassociation of the mass/entropy partials);
+  * serving: `RunaheadServer` with `mesh=` — staggered arrivals, slot
+    reuse, heterogeneous per-slot samplers covering every engine kind the
+    sampler exposes — must emit per-request token streams identical to
+    the single-device server, per backend.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+KINDS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    from repro.core import solver
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 256), jnp.float32) * 3.0
+    probs = jax.nn.softmax(x, axis=-1)
+
+    cases = [
+        ("count_above", x, dict(k=17)),                    # static fast path
+        ("count_above", x, dict(k=jnp.arange(8) + 3)),     # per-row traced
+        ("mass_at_or_above", probs, dict(p=0.9)),
+        ("mass_at_or_above", probs,
+         dict(p=jnp.linspace(0.5, 0.95, 8))),
+        ("entropy_at_temperature", x, dict(target=2.0)),
+        ("count_below", x, dict(q=0.3)),
+    ]
+    for backend in ("jnp", "pallas"):
+        for kind, op, params in cases:
+            ref = solver.solve_kind(kind, op, backend=backend,
+                                    rounds=6, spec_k=4, **params)
+            with solver.mesh_policy(mesh):
+                sh = solver.solve_kind(kind, op, backend=backend,
+                                       rounds=6, spec_k=4, **params)
+            assert bool(jnp.array_equal(ref[0], sh[0])
+                        & jnp.array_equal(ref[1], sh[1])), \\
+                (backend, kind, ref, sh)
+            print(f"{backend}/{kind} bit-exact")
+        # pure data parallelism (model axis size 1): the fused
+        # whole-solve top-k hook stays on the per-device full rows
+        mesh_dp = make_mesh_compat((8, 1), ("data", "model"))
+        ref = solver.solve_kind("count_above", x, backend=backend,
+                                rounds=6, spec_k=4, k=17)
+        with solver.mesh_policy(mesh_dp):
+            sh = solver.solve_kind("count_above", x, backend=backend,
+                                   rounds=6, spec_k=4, k=17)
+        assert bool(jnp.array_equal(ref[0], sh[0])
+                    & jnp.array_equal(ref[1], sh[1]))
+        print(f"{backend}/data-parallel fused top-k bit-exact")
+    print("OK")
+""")
+
+SERVING_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_mesh_compat
+    from repro.models.testing import reduced_config
+    from repro.models.transformer import init_params
+    from repro.serving.sampler import SamplerConfig
+    from repro.serving.server import Request, RunaheadServer
+
+    backend = "@BACKEND@"
+    cfg = dataclasses.replace(
+        reduced_config("internlm2-1.8b"), n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_head=16, d_ff=64, vocab=128,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
+
+    def workload():
+        sc = lambda **kw: SamplerConfig(backend=backend, **kw)
+        return [
+            Request("a", [1, 2, 3, 4], 5, seed=11, sampler=sc(top_k=12)),
+            Request("b", [9, 8, 7, 6, 5], 3, seed=22, sampler=sc(top_p=0.9)),
+            Request("c", [4, 4, 4], 4, seed=33,
+                    sampler=sc(target_entropy=2.0), arrival=1),
+            Request("d", [10, 20, 30, 40], 6, seed=44,
+                    sampler=sc(temperature=0.7), arrival=2),
+            Request("e", [2, 4, 6, 8], 4, seed=55,
+                    sampler=sc(top_k=8, top_p=0.95), arrival=4),
+        ]
+
+    plain = RunaheadServer(cfg, params, n_slots=4, context=32,
+                           backend=backend)
+    ref = {c.rid: c.tokens for c in plain.run(workload())}
+    meshed = RunaheadServer(cfg, params, n_slots=4, context=32,
+                            backend=backend, mesh=mesh)
+    got = {c.rid: c.tokens for c in meshed.run(workload())}
+    assert ref == got, (backend, ref, got)
+
+    # slot state really is sharded over the data axis (and stays so
+    # through donation across steps)
+    kv = meshed.scheduler.cache[0]["kv"].k
+    spec = kv.sharding.spec
+    assert len(spec) >= 2 and spec[1] == "data", spec
+    print(backend, "sharded serving streams identical:", ref)
+    print("OK")
+""")
+
+
+def _run(script):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, env=env,
+                          timeout=500)
+
+
+@pytest.mark.slow
+def test_all_kinds_bit_exact_under_mesh():
+    r = _run(KINDS_SCRIPT)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_sharded_serving_streams_identical(backend):
+    r = _run(SERVING_SCRIPT.replace("@BACKEND@", backend))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
