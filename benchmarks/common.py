@@ -24,3 +24,24 @@ def timed_s(fn, *args, reps: int = 5, warmup: int = 1) -> float:
 
 def row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def env_info() -> dict:
+    """Machine identity stamped into every BENCH_*.json artifact, so
+    trajectories across machines are comparable (a 5422 µs/round pallas
+    cell means something different in interpret mode on one CPU socket
+    than compiled on a TPU slice)."""
+    dev = jax.devices()[0]
+    try:
+        from repro.kernels.ops import _interpret
+        interpret = bool(_interpret())
+    except Exception:                                  # pragma: no cover
+        interpret = None
+    return {
+        "device_kind": dev.platform,
+        "device_model": str(getattr(dev, "device_kind", "") or ""),
+        "platform_version": str(getattr(dev.client, "platform_version", "")),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "pallas_interpret": interpret,
+    }

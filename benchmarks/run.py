@@ -51,6 +51,9 @@ def main(argv=None) -> int:
                 artifact = payload_fn()
                 if artifact is not None:
                     name, payload = artifact
+                    if isinstance(payload, dict) and "env" not in payload:
+                        from benchmarks.common import env_info
+                        payload["env"] = env_info()
                     path = os.path.join(REPO_ROOT, name)
                     with open(path, "w") as f:
                         json.dump(payload, f, indent=2)

@@ -7,6 +7,8 @@ Public API:
   runahead_solve              generic scalar interval solve (B=1 engine view)
   solver                      BATCHED runahead solve engine + backend registry
   applications                LM-stack monotone solves built on the engine
+  tuning                      cost-model-driven spec_k/placement/backend
+                              autotuning (analytic + measured tiers)
 """
 from repro.core.bisect import (
     find_root_serial,
@@ -28,12 +30,13 @@ from repro.core.paper_functions import (
     PAPER_TERMS,
     PAPER_EPS_CPU,
 )
-from repro.core import applications, solver
+from repro.core import applications, solver, tuning
 from repro.core.solver import MeshPolicy, MonotoneProblem, mesh_policy
 
 __all__ = [
     "MeshPolicy",
     "mesh_policy",
+    "tuning",
     "MonotoneProblem",
     "solver",
     "find_root_serial",

@@ -23,6 +23,12 @@ five solves run mesh-native with NO signature change — rows data-parallel
 over the policy's data axes, the operand reduction vocab-sharded over its
 vocab axis with one psum'd sign source per round.  The engine falls back
 to the single-device path per call when nothing about the operand shards.
+
+Autotuning (DESIGN.md §11): the ``rounds``/``spec_k``/``backend`` values
+passed here are a *budget and preference*, not a mandate — the tuner in
+``repro.core.tuning`` may re-decompose the serial-step budget, change the
+placement, or (with ``backend="auto"``) pick the backend per shape.  The
+results stay bit-identical to the serial walk regardless.
 """
 from __future__ import annotations
 

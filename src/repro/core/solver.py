@@ -34,6 +34,14 @@ device partial-reducing its shard and one ``psum`` per round as the
 paper's thread-join.  One ``jit(shard_map)`` per static configuration is
 cached module-wide; ``core/sharded.py`` is the B=1 point-sharded view of
 the same machinery.
+
+Autotuning (DESIGN.md §11): ``solve_kind`` no longer hard-codes HOW the
+caller's serial-step budget is spent.  Per static config it consults
+``repro.core.tuning`` for speculation depth, placement (vocab-sharded /
+data-sharded / single-device fallback — the escape hatch from the
+regressing small-shard psum join), and backend; every decision preserves
+the budget ``rounds * spec_k``, so tuned solves stay bit-identical to the
+serial sign-bit walk.
 """
 from __future__ import annotations
 
@@ -202,15 +210,23 @@ def _solve_rounds(
 
 
 def solve(
-    problem: MonotoneProblem, *, rounds: int, spec_k: int
+    problem: MonotoneProblem,
+    *,
+    rounds: int,
+    spec_k: int,
+    iterations: int | None = None,
 ) -> tuple[Array, Array]:
     """Solve a batch of monotone problems: final (lo, hi) brackets, (B,) each.
 
     ``rounds * spec_k`` serial-equivalent bisection steps per row (paper
     §IV.B).  If the problem carries a ``fused_solve`` whole-solve kernel it
     is preferred; a None return falls through to the generic loop.
+    ``iterations`` caps the serial-step budget when it does not divide
+    ``spec_k`` (a tuner-chosen decomposition): the last round walks only
+    the remaining steps, and the fused whole-solve hook — which always
+    walks full rounds — is bypassed.
     """
-    if problem.fused_solve is not None:
+    if problem.fused_solve is not None and iterations is None:
         out = problem.fused_solve(rounds=rounds, spec_k=spec_k)
         if out is not None:
             return out
@@ -222,6 +238,7 @@ def solve(
         spec_k=spec_k,
         sign_lo=problem.sign_lo,
         sign_bit=problem.sign_bit,
+        iterations=iterations,
     )
 
 
@@ -345,29 +362,213 @@ def solve_kind(
     backend: str = "jnp",
     rounds: int,
     spec_k: int,
+    tune: bool | None = None,
     **params,
 ) -> tuple[Array, Array]:
     """problem() + solve() in one call — the applications' entry point.
 
-    Under an active :func:`mesh_policy` the solve runs mesh-native
-    (vocab-sharded partial reductions + data-parallel rows, one psum'd
-    sign source per round) with NO caller-visible signature change; when
-    nothing about the operand is shardable it falls back to the plain
-    single-device path.
+    The caller's ``rounds * spec_k`` fixes the SERIAL-STEP BUDGET; how it
+    is spent — round decomposition, mesh placement, backend — is decided
+    per static config by the tuner (``repro.core.tuning``): the analytic
+    cost model by default, measured winners when ``tune=True`` /
+    ``tuning.autotune()`` is active.  ``backend`` is a *preference*:
+    binding when "jnp"/"pallas", free for the tuner when "auto".  Every
+    decision preserves the budget, so results stay bit-identical to the
+    serial sign-bit walk regardless of what the tuner picks.
+
+    Under an active :func:`mesh_policy` the decision additionally selects
+    vocab-sharding vs data-sharding vs the single-device fallback — an
+    active mesh no longer FORCES the vocab-sharded psum join the scaling
+    bench shows regressing on small shards.  ``tuning.disabled()`` pins
+    the legacy fixed behaviour.
     """
+    from repro.core import tuning
+
+    z = jnp.asarray(operand)
     policy = current_policy()
-    if policy is not None:
+    if z.ndim != 2:
+        if backend == "auto":
+            backend = "jnp"
+        return solve(problem(kind, z, backend=backend, **params),
+                     rounds=rounds, spec_k=spec_k)
+
+    iterations = rounds * spec_k
+    options = _placement_options(policy, z.shape[0], z.shape[1])
+    if backend == "auto":
+        cand_backends = tuple(backends_for(kind)) or ("jnp",)
+    else:
+        cand_backends = (backend,)
+    fixed = tuning.Decision(
+        spec_k=spec_k, rounds=rounds,
+        placement="vocab" if "vocab" in options else (
+            "data" if "data" in options else "single"),
+        backend=cand_backends[0], source="fixed",
+    )
+    key = tuning.ConfigKey(
+        kind=kind, batch=z.shape[0], vocab=z.shape[1],
+        dtype=str(z.dtype), backend_pref=backend,
+        device_count=(int(policy.mesh.devices.size)
+                      if policy is not None else 1),
+        device_kind=tuning.device_platform()[0],
+        iterations=iterations,
+    )
+    statics = {k: p for k, p in params.items() if _static_param(p)}
+    decision = tuning.decide(
+        key,
+        options=options,
+        backends=cand_backends,
+        fixed=fixed,
+        measure=(lambda cands: _measure_candidates(
+            key, cands, policy, statics)),
+        tune=tune,
+    )
+    return _execute_decision(decision, kind, z, params, policy, iterations)
+
+
+def _execute_decision(
+    decision,
+    kind: str,
+    operand: Array,
+    params: dict,
+    policy: MeshPolicy | None,
+    iterations: int,
+) -> tuple[Array, Array]:
+    """Run one solve the way a tuning Decision says to.
+
+    The decision's (rounds, spec_k) always covers the budget
+    (``rounds * spec_k >= iterations``); when it overshoots, the engine's
+    partial-last-round walk spends EXACTLY ``iterations`` serial steps —
+    the bit-exactness contract vs the serial walk.
+    """
+    iters_arg = (None if iterations == decision.rounds * decision.spec_k
+                 else iterations)
+    if decision.placement in ("vocab", "data") and policy is not None:
         out = _solve_kind_sharded(
-            policy, kind, jnp.asarray(operand), backend=backend,
-            rounds=rounds, spec_k=spec_k, **params,
+            policy, kind, operand, backend=decision.backend,
+            rounds=decision.rounds, spec_k=decision.spec_k,
+            iterations=iters_arg, placement=decision.placement, **params,
         )
         if out is not None:
             return out
     return solve(
-        problem(kind, operand, backend=backend, **params),
-        rounds=rounds,
-        spec_k=spec_k,
+        problem(kind, operand, backend=decision.backend, **params),
+        rounds=decision.rounds, spec_k=decision.spec_k,
+        iterations=iters_arg,
     )
+
+
+def _placement_options(
+    policy: MeshPolicy | None, b: int, v: int
+) -> dict[str, tuple[int, int]]:
+    """Legal placements -> (vocab_ways, data_ways) for this operand.
+
+    Mirrors the divisibility rules of the sharded path: an axis that does
+    not divide its dim is dropped.  "vocab" keeps the data axes too (the
+    engine shards both); "single" is always legal.
+    """
+    opts: dict[str, tuple[int, int]] = {"single": (1, 1)}
+    if policy is None:
+        return opts
+    mesh = policy.mesh
+    va = policy.vocab_axis
+    vw = 1
+    if va is not None and va in mesh.axis_names and mesh.shape[va] > 1 \
+            and v % mesh.shape[va] == 0:
+        vw = mesh.shape[va]
+    dw = 1
+    for a in policy.data_axes:
+        if a in mesh.axis_names:
+            dw *= mesh.shape[a]
+    if dw <= 1 or b % dw:
+        dw = 1
+    if dw > 1:
+        opts["data"] = (1, dw)
+    if vw > 1:
+        opts["vocab"] = (vw, dw)
+    return opts
+
+
+def _measure_candidates(key, candidates, policy, statics) -> list[dict]:
+    """Micro-benchmark candidate Decisions (the tuner's measured tier).
+
+    Synthetic operands/params of the keyed shapes; each candidate is
+    compiled (jit around the full tuned solve, matching how the engine is
+    driven) and timed with a warmup + median, exactly the benchmark
+    harness convention.  Runs eagerly on the live devices even when the
+    triggering solve is itself being traced.
+
+    Returns one report per candidate: ``{"seconds": median, "collectives":
+    join-term-from-HLO | None}`` — sharded candidates get their REAL
+    collective count/payload read out of the compiled HLO via
+    ``analyse_hlo``, so the cache records what the join actually costs on
+    this mesh rather than the hand model's estimate.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core import tuning
+
+    # The triggering solve is usually mid-trace; without swapping the
+    # ambient trace out, jnp.asarray would stage a TRACER here and every
+    # compiled candidate call would fail.  eval_context (not
+    # ensure_compile_time_eval, whose eager-constant-folding flag leaks
+    # into the nested jit trace) makes the measurement truly eager.
+    try:
+        from jax._src.core import eval_context
+    except ImportError:                                # pragma: no cover
+        import contextlib
+        eval_context = contextlib.nullcontext
+    with eval_context():
+        return _measure_candidates_eager(key, candidates, policy, statics,
+                                         time, np, tuning)
+
+
+def _measure_candidates_eager(key, candidates, policy, statics, time, np,
+                              tuning) -> list[dict]:
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(key.batch, key.vocab)).astype(np.float32) * 2.0
+    if key.kind == "mass_at_or_above":
+        x = np.exp(x) / np.exp(x).sum(-1, keepdims=True)
+    x = jnp.asarray(x, dtype=key.dtype)
+    params = dict(statics)
+    if key.kind == "count_above" and "k" not in params:
+        params["k"] = max(1, key.vocab // 8)
+    if key.kind == "count_below" and "q" not in params:
+        params["q"] = 0.3
+    if key.kind == "mass_at_or_above" and "p" not in params:
+        params["p"] = 0.9
+    if key.kind == "entropy_at_temperature" and "target" not in params:
+        params["target"] = 2.0
+
+    reports = []
+    for decision in candidates:
+        fn = jax.jit(lambda op, d=decision: _execute_decision(
+            d, key.kind, op, params, policy, key.iterations))
+        try:
+            compiled = fn.lower(x).compile()
+            jax.block_until_ready(compiled(x))          # warm
+            reps = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                jax.block_until_ready(compiled(x))
+                reps.append(time.perf_counter() - t0)
+            reps.sort()
+            coll = None
+            if decision.placement != "single" and policy is not None:
+                try:
+                    coll = tuning.join_term_from_hlo(
+                        compiled.as_text(),
+                        device_count=key.device_count)
+                except Exception:
+                    coll = None
+            reports.append({"seconds": reps[len(reps) // 2],
+                            "collectives": coll})
+        except Exception:
+            # infeasible candidate (e.g. forced placement the mesh
+            # cannot honour) — reported as NaN, never selected
+            reports.append({"seconds": float("nan"), "collectives": None})
+    return reports
 
 
 # ---------------------------------------------------------------------------
@@ -398,6 +599,8 @@ def _solve_kind_sharded(
     backend: str,
     rounds: int,
     spec_k: int,
+    iterations: int | None = None,
+    placement: str = "vocab",
     **params,
 ):
     """Mesh-native solve_kind; None when the policy cannot shard anything.
@@ -409,13 +612,19 @@ def _solve_kind_sharded(
     vocab replicated the ordinary factory runs on the local batch shard —
     including whole-solve fused kernels, which stay legal because each
     device then holds full rows.
+
+    ``placement`` comes from the tuner: "vocab" is the legacy behaviour
+    (prefer the vocab axis, fall back to data-only when it cannot shard);
+    "data" forces pure data parallelism — no psum join at all.
+    ``iterations`` caps the serial-step budget for tuner-chosen
+    decompositions that overshoot it (partial last-round walk).
     """
     if operand.ndim != 2:
         return None
     mesh = policy.mesh
     b, v = operand.shape
 
-    va = policy.vocab_axis
+    va = policy.vocab_axis if placement == "vocab" else None
     if va is not None and (va not in mesh.axis_names
                            or mesh.shape[va] <= 1 or v % mesh.shape[va]):
         va = None
@@ -433,7 +642,7 @@ def _solve_kind_sharded(
               if k not in statics}
     arr_names = tuple(sorted(arrays))
     key = (
-        mesh, kind, backend, rounds, spec_k, va, data,
+        mesh, kind, backend, rounds, spec_k, iterations, va, data,
         b, v, str(operand.dtype),
         tuple(sorted(statics.items())),
         tuple((n, arrays[n].shape, str(arrays[n].dtype))
@@ -442,7 +651,7 @@ def _solve_kind_sharded(
     fn = _SHARDED_SOLVE_CACHE.get(key)
     if fn is None:
         fn = _build_sharded_solve(
-            mesh, kind, backend, rounds, spec_k, va, data, v,
+            mesh, kind, backend, rounds, spec_k, iterations, va, data, v,
             statics, arr_names,
             tuple(arrays[n].ndim for n in arr_names),
         )
@@ -452,8 +661,8 @@ def _solve_kind_sharded(
     return fn(operand, *(arrays[n] for n in arr_names))
 
 
-def _build_sharded_solve(mesh, kind, backend, rounds, spec_k, va, data,
-                         global_v, statics, arr_names, arr_ndims):
+def _build_sharded_solve(mesh, kind, backend, rounds, spec_k, iterations,
+                         va, data, global_v, statics, arr_names, arr_ndims):
     module = _LAZY_BACKEND_MODULES.get(backend)
     if module is not None:
         importlib.import_module(module)
@@ -467,7 +676,7 @@ def _build_sharded_solve(mesh, kind, backend, rounds, spec_k, va, data,
             # whole-solve hooks stay available on the local batch shard
             return solve(
                 _REGISTRY[(kind, backend)](op_local, **kw),
-                rounds=rounds, spec_k=spec_k,
+                rounds=rounds, spec_k=spec_k, iterations=iterations,
             )
         try:
             factory = _SHARDED_REGISTRY[(kind, backend)]
@@ -481,6 +690,7 @@ def _build_sharded_solve(mesh, kind, backend, rounds, spec_k, va, data,
             prob.multi_eval, prob.lo0, prob.hi0,
             rounds=rounds, spec_k=spec_k,
             sign_lo=prob.sign_lo, sign_bit=prob.sign_bit,
+            iterations=iterations,
         )
 
     # 0-d params replicate; (B,) per-row params shard with the batch

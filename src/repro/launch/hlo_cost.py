@@ -12,7 +12,9 @@ accumulates:
   * bytes: per top-level instruction, output + operand bytes — the
            post-optimisation HLO is fusion-granular, so this models HBM
            traffic at the fusion boundary (XLA's own convention),
-  * collective_bytes + histogram, multiplied by execution count.
+  * collective_bytes + histogram, multiplied by execution count, plus a
+    per-collective-kind ``collective_detail`` (count + payload bytes,
+    loop-multiplied) — what ``core/tuning.py`` prices its join term from.
 
 Trip counts are recovered from the loop-condition computation's integer
 constants (jax scans compare an induction var against a literal).
@@ -264,6 +266,9 @@ def analyse_hlo(hlo: str) -> dict:
     bytes_accessed = 0.0
     coll_bytes = 0.0
     coll_histo: dict[str, float] = {}
+    # per-collective-kind execution counts AND payload bytes (both
+    # loop-trip multiplied) — the tuner's join term is priced from this
+    coll_detail: dict[str, dict[str, float]] = {}
     # Bytes are charged only for compute / data-movement ops.  The CPU
     # backend materialises every elementwise intermediate a TPU lowering
     # would fuse, so charging all ops would model CPU HBM traffic, not the
@@ -286,6 +291,10 @@ def analyse_hlo(hlo: str) -> dict:
                 b = _nbytes(ins.out_type)
                 coll_bytes += m * b
                 coll_histo[cm.group(1)] = coll_histo.get(cm.group(1), 0) + m
+                d = coll_detail.setdefault(
+                    cm.group(1), {"count": 0.0, "bytes": 0.0})
+                d["count"] += m
+                d["bytes"] += m * b
             if ins.op in _BYTE_OPS:
                 b_out = _nbytes(ins.out_type)
                 if ins.op in ("dynamic-slice", "gather", "slice"):
@@ -311,5 +320,9 @@ def analyse_hlo(hlo: str) -> dict:
         "bytes_accessed": bytes_accessed,
         "collective_bytes": coll_bytes,
         "collectives": {k: int(v) for k, v in coll_histo.items()},
+        "collective_detail": {
+            k: {"count": int(v["count"]), "bytes": float(v["bytes"])}
+            for k, v in coll_detail.items()
+        },
         "n_computations": len(comps),
     }

@@ -25,6 +25,7 @@ BEFORE jax touches the backend) so a laptop can exercise the mesh:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import logging
 import os
 import time
@@ -121,7 +122,14 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=0.0)
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--target-entropy", type=float, default=None)
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--backend", default="jnp",
+                    choices=["jnp", "pallas", "auto"],
+                    help="engine backend; 'auto' lets the tuner choose "
+                         "per solve shape")
+    ap.add_argument("--autotune", action="store_true",
+                    help="enable the tuner's measured tier: micro-bench "
+                         "top candidate configs on device and persist "
+                         "winners (REPRO_TUNING_CACHE)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--continuous", action="store_true",
                     help="slot-based continuous batching (RunaheadServer)")
@@ -166,9 +174,21 @@ def main(argv=None):
         top_p=args.top_p,
         backend=args.backend,
     )
-    if args.continuous:
-        return _run_continuous(cfg, params, args, sc, mesh)
-    return _run_oneshot(cfg, params, args, sc, key)
+    from repro.core import tuning
+
+    with tuning.autotune(args.autotune) if args.autotune \
+            else contextlib.nullcontext():
+        if args.continuous:
+            out = _run_continuous(cfg, params, args, sc, mesh)
+        else:
+            out = _run_oneshot(cfg, params, args, sc, key)
+    for cfg_key, decision in tuning.explain():
+        log.info("tuned %s -> %s/%s spec_k=%d rounds=%d [%s]",
+                 cfg_key, decision.placement, decision.backend,
+                 decision.spec_k, decision.rounds, decision.source)
+    if args.autotune:
+        log.info("tuning cache: %s", tuning.cache_path())
+    return out
 
 
 if __name__ == "__main__":

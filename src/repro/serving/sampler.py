@@ -50,7 +50,8 @@ class SamplerConfig:
     top_p: float = 0.0                    # 0 = off
     spec_k: int = 5                       # speculation depth (paper's k)
     rounds: int = 8
-    backend: str = "jnp"                  # "jnp" | "pallas" — ALL solves
+    backend: str = "jnp"                  # "jnp" | "pallas" | "auto" (tuner
+                                          # picks per shape) — ALL solves
 
 
 def sample(

@@ -1,8 +1,21 @@
+import os
+import tempfile
+
 import jax
 import pytest
 
 # Tests run on the single CPU device (the 512-device dry-run is exercised
 # via its own launcher subprocess, never inside pytest — DESIGN.md §5).
+
+# Hermetic tuning cache: without this, a measured winner persisted by an
+# earlier benchmark (or test) run in ~/.cache/repro would be replayed
+# into every solve_kind in the suite — decisions must come from the
+# tests' own state.  Subprocess tests inherit the same path via env.
+os.environ.setdefault(
+    "REPRO_TUNING_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro_test_tuning_"),
+                 "tuning.json"),
+)
 
 
 @pytest.fixture(scope="session")

@@ -28,7 +28,7 @@ KINDS_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax
     import jax.numpy as jnp
-    from repro.core import solver
+    from repro.core import solver, tuning
     from repro.launch.mesh import make_mesh_compat
 
     mesh = make_mesh_compat((2, 4), ("data", "model"))
@@ -47,23 +47,36 @@ KINDS_SCRIPT = textwrap.dedent("""
     ]
     for backend in ("jnp", "pallas"):
         for kind, op, params in cases:
-            ref = solver.solve_kind(kind, op, backend=backend,
-                                    rounds=6, spec_k=4, **params)
-            with solver.mesh_policy(mesh):
-                sh = solver.solve_kind(kind, op, backend=backend,
-                                       rounds=6, spec_k=4, **params)
+            # tuning.disabled() pins the legacy fixed policy: plain path
+            # unmeshed, vocab-sharded shard_map under the policy — the
+            # pair this differential exists to compare
+            with tuning.disabled():
+                ref = solver.solve_kind(kind, op, backend=backend,
+                                        rounds=6, spec_k=4, **params)
+                with solver.mesh_policy(mesh):
+                    sh = solver.solve_kind(kind, op, backend=backend,
+                                           rounds=6, spec_k=4, **params)
             assert bool(jnp.array_equal(ref[0], sh[0])
                         & jnp.array_equal(ref[1], sh[1])), \\
                 (backend, kind, ref, sh)
-            print(f"{backend}/{kind} bit-exact")
+            # tuned: whatever decomposition/placement the tuner picks
+            # under the mesh must land on the same brackets
+            with solver.mesh_policy(mesh):
+                tu = solver.solve_kind(kind, op, backend=backend,
+                                       rounds=6, spec_k=4, **params)
+            assert bool(jnp.array_equal(ref[0], tu[0])
+                        & jnp.array_equal(ref[1], tu[1])), \\
+                (backend, kind, tuning.explain()[-1], ref, tu)
+            print(f"{backend}/{kind} bit-exact (fixed + tuned)")
         # pure data parallelism (model axis size 1): the fused
         # whole-solve top-k hook stays on the per-device full rows
         mesh_dp = make_mesh_compat((8, 1), ("data", "model"))
-        ref = solver.solve_kind("count_above", x, backend=backend,
-                                rounds=6, spec_k=4, k=17)
-        with solver.mesh_policy(mesh_dp):
-            sh = solver.solve_kind("count_above", x, backend=backend,
-                                   rounds=6, spec_k=4, k=17)
+        with tuning.disabled():
+            ref = solver.solve_kind("count_above", x, backend=backend,
+                                    rounds=6, spec_k=4, k=17)
+            with solver.mesh_policy(mesh_dp):
+                sh = solver.solve_kind("count_above", x, backend=backend,
+                                       rounds=6, spec_k=4, k=17)
         assert bool(jnp.array_equal(ref[0], sh[0])
                     & jnp.array_equal(ref[1], sh[1]))
         print(f"{backend}/data-parallel fused top-k bit-exact")
