@@ -11,6 +11,15 @@ t=0) is served two ways on the same tiny dense model:
     (``serving.server.RunaheadServer``), so a finished request's lane is
     immediately re-used by the queue.
 
+Two further cells put sequence-level runahead on the board (DESIGN.md
+§12): ``continuous_repetitive`` serves a repeated-pattern greedy workload
+serially, ``speculative`` serves the SAME workload with draft-and-verify
+(n-gram self-drafting, draft_len=4) — same token streams (greedy spec is
+bit-exact), fewer verify steps; the cell reports acceptance rate and
+drafted-vs-accepted counts.  Every continuous cell also reports dispatch
+and host-sync counts — the per-token launch overhead that explains the
+pallas continuous-vs-oneshot gap.
+
 Per the harness convention each (mode, backend) cell runs twice and the
 second, jit-warm execution is reported.  Emits ``BENCH_serving.json``:
 throughput plus p50/p99 per-request latency for every cell, jnp AND
@@ -40,6 +49,11 @@ CONTEXT = PROMPT_LEN + N_NEW_MAX
 TOP_K = 50
 VOCAB = 8192
 BACKENDS = ("jnp", "pallas")
+DRAFT_LEN = 4                    # speculative rows' verify width
+REP_N_NEW_MIN, REP_N_NEW_MAX = 48, 64   # long streams: greedy decode
+# settles into loops the n-gram drafter predicts near-perfectly, so the
+# acceptance aggregate is dominated by the in-loop regime
+REP_CONTEXT = PROMPT_LEN + REP_N_NEW_MAX
 
 _PAYLOAD: dict | None = None
 
@@ -108,9 +122,27 @@ def _run_oneshot(cfg, params, reqs: list[Request]):
     return wall, useful, latency, row_tokens
 
 
-def _run_continuous(cfg, params, reqs: list[Request], backend: str):
-    server = RunaheadServer(cfg, params, n_slots=N_SLOTS, context=CONTEXT,
-                            backend=backend)
+def _repetitive_requests(backend: str) -> list[Request]:
+    """The workload self-drafting should win: prompts are short repeated
+    patterns, sampling is greedy — decode settles into loops the n-gram
+    drafter predicts, so most verify rows get accepted."""
+    rng = np.random.default_rng(7)
+    sc = SamplerConfig(top_k=TOP_K, backend=backend, greedy=True)
+    out = []
+    for i in range(N_REQUESTS):
+        pattern = rng.integers(0, VOCAB, size=PROMPT_LEN // 2).tolist()
+        out.append(Request(
+            rid=i, prompt=(pattern * 2)[:PROMPT_LEN],
+            n_new=int(rng.integers(REP_N_NEW_MIN, REP_N_NEW_MAX + 1)),
+            seed=2000 + i, sampler=sc,
+        ))
+    return out
+
+
+def _run_continuous(cfg, params, reqs: list[Request], backend: str,
+                    draft_len: int = 1, context: int = CONTEXT):
+    server = RunaheadServer(cfg, params, n_slots=N_SLOTS, context=context,
+                            backend=backend, draft_len=draft_len)
     t0 = time.perf_counter()
     for r in reqs:
         server.submit(r)
@@ -118,7 +150,20 @@ def _run_continuous(cfg, params, reqs: list[Request], backend: str):
     wall = time.perf_counter() - t0
     latency = {c.rid: c.finish_time - c.arrival_time for c in done}
     useful = sum(len(c.tokens) for c in done)
-    return wall, useful, latency, server.scheduler.n_decode_steps
+    return wall, useful, latency, server.scheduler
+
+
+def _dispatch_stats(sched) -> dict:
+    """Per-step dispatch accounting for the pallas-regression root cause
+    (DESIGN.md §9): continuous serving pays one jitted launch + one
+    device->host sync PER TOKEN where one-shot amortises its whole tail
+    into 3 fused scans."""
+    return {
+        "decode_steps": sched.n_decode_steps,
+        "dispatches": sched.n_dispatches,
+        "host_syncs": sched.n_host_syncs,
+        "decoded_row_tokens": sched.n_decode_steps * N_SLOTS,
+    }
 
 
 def _cell(mode, backend, wall, useful, latency, extra=None) -> dict:
@@ -157,16 +202,53 @@ def run() -> list[str]:
         ))
 
         for _ in range(2):
-            wall, useful, lat, steps = _run_continuous(
+            wall, useful, lat, sched = _run_continuous(
                 cfg, params, reqs, backend)
             cell = _cell("continuous", backend, wall, useful, lat,
-                         {"decode_steps": steps,
-                          "decoded_row_tokens": steps * N_SLOTS})
+                         _dispatch_stats(sched))
         results.append(cell)
         out.append(row(
             f"serving/continuous_{backend}", 1e6 * cell["wall_s"],
             f"tok_per_s={cell['tok_per_s']};"
-            f"p99_ms={cell['latency_p99_ms']};decode_steps={steps}",
+            f"p99_ms={cell['latency_p99_ms']};"
+            f"decode_steps={sched.n_decode_steps}",
+        ))
+
+        # -- speculative rows: repetitive workload, continuous baseline
+        # vs draft-and-verify (greedy streams are bit-identical; the
+        # speculative row's win is tokens per verify step)
+        rep = _repetitive_requests(backend)
+        for _ in range(2):
+            wall, useful, lat, sched = _run_continuous(
+                cfg, params, rep, backend, context=REP_CONTEXT)
+            base = _cell("continuous_repetitive", backend, wall, useful,
+                         lat, _dispatch_stats(sched))
+        results.append(base)
+        out.append(row(
+            f"serving/continuous_rep_{backend}", 1e6 * base["wall_s"],
+            f"tok_per_s={base['tok_per_s']}",
+        ))
+
+        for _ in range(2):
+            wall, useful, lat, sched = _run_continuous(
+                cfg, params, rep, backend, draft_len=DRAFT_LEN,
+                context=REP_CONTEXT)
+            cell = _cell(
+                "speculative", backend, wall, useful, lat,
+                {**_dispatch_stats(sched),
+                 "draft_len": DRAFT_LEN,
+                 "drafted": sched.n_drafted,
+                 "accepted": sched.n_accepted,
+                 "acceptance_rate": round(sched.acceptance_rate, 3),
+                 "speedup_vs_continuous": round(
+                     (useful / wall) / base["tok_per_s"], 2)},
+            )
+        results.append(cell)
+        out.append(row(
+            f"serving/speculative_{backend}", 1e6 * cell["wall_s"],
+            f"tok_per_s={cell['tok_per_s']};"
+            f"accept={cell['acceptance_rate']};"
+            f"speedup={cell['speedup_vs_continuous']}x",
         ))
 
     _PAYLOAD = {
@@ -176,7 +258,8 @@ def run() -> list[str]:
             "n_requests": N_REQUESTS, "n_slots": N_SLOTS,
             "prompt_len": PROMPT_LEN,
             "n_new_range": [N_NEW_MIN, N_NEW_MAX], "top_k": TOP_K,
-            "context": CONTEXT,
+            "context": CONTEXT, "draft_len": DRAFT_LEN,
+            "repetitive_n_new_range": [REP_N_NEW_MIN, REP_N_NEW_MAX],
             "device": jax.default_backend(),
             "pallas_interpret": jax.default_backend() != "tpu",
         },

@@ -102,6 +102,10 @@ class Decision:
     placement: str
     backend: str
     source: str = "model"       # model | measured | cache | fixed | override
+    draft_len: int = 1          # serving speculation depth (DESIGN.md §12):
+    # tokens fed per verify step, 1 = serial decode.  Unlike spec_k this
+    # knob is workload-sensitive (acceptance rate), so it is decided by
+    # decide_draft_len from observed acceptance, not the roofline model.
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -112,6 +116,7 @@ class Decision:
             spec_k=int(d["spec_k"]), rounds=int(d["rounds"]),
             placement=str(d["placement"]), backend=str(d["backend"]),
             source=str(d.get("source", "cache")),
+            draft_len=int(d.get("draft_len", 1)),
         )
 
 
@@ -241,6 +246,50 @@ def predict_cost(
         payload = float(bloc) * m * 4 * vw
         t_join = profile.join_alpha * math.log2(vw) + payload / profile.link_bw
     return decision.rounds * (t_eval + t_join + profile.dispatch)
+
+
+def decide_draft_len(
+    *,
+    acceptance: float,
+    token_cost: float = 1.0,
+    overhead: float | None = None,
+    max_draft_len: int = 8,
+) -> int:
+    """Pick the serving speculation depth from observed acceptance.
+
+    The speculation-overhead pricing the Many-core Machine Model demands:
+    a verify step over L grid rows costs ``overhead + L * token_cost``
+    (dispatch + per-row forward work) and emits ``E(L) = (1 - a^L) /
+    (1 - a)`` tokens in expectation when each drafted token survives with
+    probability ``a`` (leading-run acceptance: 1 guaranteed correction /
+    bonus token plus a geometric run of accepted drafts).  Returns the
+    ``L`` in [1, max_draft_len] maximising expected tokens per second;
+    ``a = 0`` prices every draft as rejected work and correctly returns 1.
+
+    ``overhead`` and ``token_cost`` share a unit (only their ratio
+    matters).  The default overhead is the fixed-per-step cost measured
+    from BENCH_serving.json's continuous cells — serial step ≈ overhead
+    + token_cost, L-row verify step ≈ overhead + L·token_cost solves to
+    ~4.3 token-costs of launch + host-sync per step on the CPU box —
+    NOT the profile's raw ``dispatch`` seconds, which against the
+    token_cost=1.0 unit would price steps as free and pin L=1.  Pass a
+    measured ``overhead`` (same units as token_cost) to recalibrate per
+    deployment.
+    """
+    if not 0.0 <= acceptance <= 1.0:
+        raise ValueError(f"acceptance must be in [0, 1], got {acceptance}")
+    if max_draft_len < 1:
+        raise ValueError(f"max_draft_len must be >= 1, got {max_draft_len}")
+    if overhead is None:
+        overhead = 4.3 * token_cost
+    a = min(acceptance, 1.0 - 1e-9)
+    best_l, best_rate = 1, 0.0
+    for length in range(1, max_draft_len + 1):
+        expected = (1.0 - a ** length) / (1.0 - a)
+        rate = expected / (overhead + length * token_cost)
+        if rate > best_rate * (1.0 + 1e-12):
+            best_l, best_rate = length, rate
+    return best_l
 
 
 def join_term_from_hlo(

@@ -63,15 +63,39 @@ def _run_oneshot(cfg, params, args, sc, key):
     return toks
 
 
+def _resolve_draft_len(args, cfg) -> int:
+    """--draft-len N pins the depth; 'auto' asks the tuner's speculation
+    cost model at a mid-range acceptance prior (refined per deployment by
+    feeding back scheduler.acceptance_rate)."""
+    if not args.speculative:
+        return 1
+    from repro.models.decode import verify_supported
+
+    if not verify_supported(cfg):
+        raise SystemExit(
+            "--speculative needs an all-dense layer stack "
+            f"(arch {args.arch!r} has recurrent/MoE layers)")
+    if args.draft_len != "auto":
+        return max(1, int(args.draft_len))
+    from repro.core.tuning import decide_draft_len
+
+    return decide_draft_len(acceptance=0.6)
+
+
 def _run_continuous(cfg, params, args, sc, mesh=None):
     if cfg.is_encdec:
         raise SystemExit("--continuous does not drive enc-dec archs yet")
     rng = np.random.default_rng(args.seed)
     context = args.prompt_len + args.new_tokens
+    draft_len = _resolve_draft_len(args, cfg)
     server = RunaheadServer(
         cfg, params, n_slots=args.slots, context=context,
         spec_k=sc.spec_k, rounds=sc.rounds, backend=sc.backend, mesh=mesh,
+        draft_len=draft_len,
     )
+    if draft_len > 1:
+        log.info("speculative decoding on: draft_len=%d (n-gram "
+                 "self-drafting)", draft_len)
     if mesh is not None:
         log.info("mesh-native serving over %s",
                  dict(zip(mesh.axis_names, mesh.devices.shape)))
@@ -104,6 +128,12 @@ def _run_continuous(cfg, params, args, sc, mesh=None):
              1e3 * float(np.quantile(lat, 0.99)),
              1e3 * float(lat[-1]),
              max(c.queue_steps for c in done))
+    if server.scheduler.draft_len > 1:
+        s = server.scheduler
+        log.info("speculation: drafted %d, accepted %d (rate %.2f), "
+                 "%.2f tokens/step",
+                 s.n_drafted, s.n_accepted, s.acceptance_rate,
+                 n_tok / max(1, s.n_decode_steps))
     for c in sorted(done, key=lambda c: c.rid)[:4]:
         log.info("rid=%s first tokens: %s", c.rid, c.tokens[:8])
     assert len(done) == args.requests
@@ -139,6 +169,12 @@ def main(argv=None):
                     help="[continuous] decode slot pool size")
     ap.add_argument("--arrival-burst", type=int, default=2,
                     help="[continuous] requests arriving per decode step")
+    ap.add_argument("--speculative", action="store_true",
+                    help="[continuous] draft-and-verify speculative "
+                         "decoding (n-gram self-drafting; dense archs)")
+    ap.add_argument("--draft-len", default="auto",
+                    help="[continuous] tokens fed per verify step, or "
+                         "'auto' for the tuner's speculation cost model")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="[continuous] device mesh, e.g. 2x4 = 2-way slot "
                          "data-parallel x 4-way solver vocab sharding")
@@ -154,6 +190,8 @@ def main(argv=None):
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.host_devices}"
         )
+    if args.speculative and not args.continuous:
+        raise SystemExit("--speculative requires --continuous")
     mesh = None
     if args.mesh is not None:
         if not args.continuous:

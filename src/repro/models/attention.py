@@ -471,6 +471,122 @@ def decode_attend(
     return out @ p["wo"].astype(x.dtype), new_cache
 
 
+def _verify_sdpa(q, k, v, mask, n_rep: int):
+    """``_decode_sdpa`` generalised to L queries: the speculative verify
+    grid (DESIGN.md §12).  q: (B, L, nq, hd); k/v: the (B, C, nkv, hd)
+    ring cache with the draft K/V already written at their ring slots;
+    mask: (B, 1, 1, L, C) per-query validity.
+
+    Bit-exactness requirement: for query l the reduction over the cache
+    axis must be element-for-element the reduction the serial
+    ``_decode_sdpa`` performs at position pos+l — same C-length buffer,
+    same values at same slots, masked entries exp()-ing to exactly 0 —
+    so the accepted prefix of a verify grid reproduces serial logits.
+    """
+    B, L, nq, hd = q.shape
+    nkv = k.shape[2]
+    qg = q.reshape(B, L, nkv, n_rep, hd)
+    scores = jnp.einsum("blhrd,bkhd->bhrlk", qg, k).astype(jnp.float32)
+    scores = scores * (1.0 / math.sqrt(hd))
+    scores = shard(scores, "batch", None, None, None, "cache_seq")
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrlk,bkhd->blhrd", probs, v)
+    return out.reshape(B, L, nq, hd)
+
+
+def decode_attend_multi(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,            # (B, L, D) current token + drafted run
+    pos: jax.Array,          # (B,) int32 absolute position of x[:, 0]
+    cache: KVCache,
+    *,
+    window: int | jax.Array = 0,
+) -> tuple[jax.Array, KVCache, KVCache]:
+    """Verify-grid attention: L tokens per row in ONE step (speculative
+    decode, DESIGN.md §12).
+
+    Writes all L K/V rows into the ring cache at slots (pos+l) % C —
+    exactly the slots L serial steps would have written — then attends
+    each query l over the SAME C-length buffer with the serial step's
+    validity mask at depth pos+l.  Keeping the drafted K/V inside the
+    buffer (instead of appending a block) preserves the serial reduction
+    tree, which is what makes accepted rows bit-identical to serial
+    decode.
+
+    Returns (out (B, L, D'), cache-with-all-L-written, stash): ``stash``
+    is a KVCache-shaped pytree of the PRE-write values at the L touched
+    slots, which ``models.decode.rollback_cache_runs`` scatters back for
+    rejected draft rows.
+    """
+    B, L, _ = x.shape
+    C = cache.capacity
+    if L > C:
+        raise ValueError(
+            f"draft run length {L} exceeds cache capacity {C}: ring slots "
+            "would collide")
+    q = _project_q(p, cfg, x)                                # (B,L,nq,hd)
+    k_new, v_new = _project_kv(p, cfg, x)                    # (B,L,nkv,hd)
+    pos = jnp.asarray(pos, jnp.int32)
+    pgrid = pos[:, None] + jnp.arange(L, dtype=jnp.int32)[None, :]  # (B,L)
+    if not cfg.learned_pos:
+        q = apply_rope_heads(q, pgrid, cfg.rope_theta)
+        k_new = apply_rope_heads(k_new, pgrid, cfg.rope_theta)
+
+    slots_w = (pgrid % C).astype(jnp.int32)                  # (B, L)
+    rows = jnp.arange(B)[:, None]
+
+    def write(buf, new):                     # (B,C,...) <- (B,L,...)
+        return buf.at[rows, slots_w].set(new)
+
+    def keep(buf):                           # pre-write values at targets
+        return buf[rows, slots_w]
+
+    if cache.quantized:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        stash = KVCache(k=keep(cache.k), v=keep(cache.v),
+                        k_scale=keep(cache.k_scale),
+                        v_scale=keep(cache.v_scale))
+        k_i8 = shard(write(cache.k, kq), "batch", "cache_seq", "kv_heads",
+                     None)
+        v_i8 = shard(write(cache.v, vq), "batch", "cache_seq", "kv_heads",
+                     None)
+        k_sc = write(cache.k_scale, ks)
+        v_sc = write(cache.v_scale, vs)
+        new_cache = KVCache(k=k_i8, v=v_i8, k_scale=k_sc, v_scale=v_sc)
+        k = _dequantize_kv(k_i8, k_sc, x.dtype)
+        v = _dequantize_kv(v_i8, v_sc, x.dtype)
+    else:
+        stash = KVCache(k=keep(cache.k), v=keep(cache.v))
+        k = shard(write(cache.k, k_new), "batch", "cache_seq", "kv_heads",
+                  None)
+        v = shard(write(cache.v, v_new), "batch", "cache_seq", "kv_heads",
+                  None)
+        new_cache = KVCache(k=k, v=v)
+
+    # per-query validity: the serial per-slot mask of decode_attend at
+    # depth pos+l, one row per (b, l).  Ring slots written for DEEPER
+    # draft positions are masked out here exactly as serial would mask
+    # the stale data they overwrote.
+    slots = jnp.arange(C)[None, None, :]                     # (1,1,C)
+    w = jnp.asarray(window)
+    pq = pgrid[:, :, None]                                   # (B,L,1)
+    slot_q = pq % C
+    wraps = (pq // C).astype(jnp.int32)
+    p_s = jnp.where(slots <= slot_q, wraps * C + slots,
+                    (wraps - 1) * C + slots)
+    valid = (p_s >= 0) & (p_s <= pq)
+    valid &= (p_s > pq - w) | (w <= 0)
+    mask = valid[:, None, None]                              # (B,1,1,L,C)
+
+    out = _verify_sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    out = out.reshape(B, L, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), new_cache, stash
+
+
 def decode_cross_attend(
     p: Params, cfg: ModelConfig, x: jax.Array, enc_k: jax.Array,
     enc_v: jax.Array,

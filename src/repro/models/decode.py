@@ -351,6 +351,110 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------------
+# speculative verify (draft-and-verify decode, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def verify_supported(cfg: ModelConfig) -> bool:
+    """Whether ``decode_verify`` can serve this arch.
+
+    Dense attention stacks only: recurrent layers (SSM / xLSTM) would need
+    per-draft-position state checkpoints to roll back, and MoE capacity
+    cuts couple the (B, L) grid rows through the router, breaking the
+    accepted-prefix == serial contract.
+    """
+    return all(kind == "dense" for kind, _ in layer_plan(cfg))
+
+
+def decode_verify(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                 # (B, L): current token + drafted run
+    pos: jax.Array,                    # (B,) int32 position of tokens[:, 0]
+    cache: Cache,
+    *,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Cache, list]:
+    """Score a (B, L) token grid in ONE forward against the slotted cache.
+
+    Row b feeds [t_0, d_1, .., d_{L-1}] at positions pos_b .. pos_b+L-1:
+    the current token then the drafted run.  ``logits[:, l]`` predicts the
+    token at position pos+l+1 given that prefix — the sequence-level
+    runahead grid: L serial decode steps answered by one batched forward,
+    the accept/reject of each drafted token playing the paper's sign
+    check.
+
+    All L K/V rows are written into the ring cache (the state L serial
+    steps would have left); the returned ``stash`` holds the pre-write
+    values at the touched slots so ``rollback_cache_runs`` can restore the
+    rows the acceptance logic rejects.  Returns (logits (B, L, V) f32,
+    cache, stash).  Dense stacks only — see ``verify_supported``.
+    """
+    B, L = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    x = embed(params["embed"], tokens, compute_dtype)        # (B, L, D)
+    if cfg.learned_pos:
+        pe = params["pos_embed"].astype(compute_dtype)
+        x = x + pe[pos[:, None] + jnp.arange(L, dtype=jnp.int32)[None, :]]
+
+    new_cache: Cache = []
+    stashes: list = []
+    for run_params, entry, (kind, _) in zip(
+        params["runs"], cache, layer_plan(cfg)
+    ):
+        if kind != "dense":
+            raise ValueError(
+                f"decode_verify supports dense layer stacks only, got "
+                f"{kind!r} (see verify_supported)")
+
+        def body(x, inp):
+            p_l, entry_l = inp
+            eps = cfg.norm_eps
+            h = apply_norm(cfg.norm, p_l["ln1"], x, eps)
+            a, kv, st = attn_lib.decode_attend_multi(
+                p_l["attn"], cfg, h, pos, entry_l["kv"])
+            x = x + a
+            h = apply_norm(cfg.norm, p_l["ln2"], x, eps)
+            x = x + apply_mlp(cfg.act, p_l["mlp"], h)
+            return x, ({"kv": kv}, st)
+
+        x, (new_entry, st) = jax.lax.scan(body, x, (run_params, entry))
+        new_cache.append(new_entry)
+        stashes.append({"kv": st})
+
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, x, cfg.vocab)                    # (B, L, V)
+    return shard(logits, "batch", None, "vocab"), new_cache, stashes
+
+
+def rollback_cache_runs(cache: Cache, stash: list, pos, n_keep) -> Cache:
+    """Restore cache rows ``decode_verify`` wrote for rejected positions.
+
+    The dual of ``write_cache_slot``'s admission scatter, at draft-run
+    granularity: cache leaves are (layers, B, C, ...) with the full L-row
+    speculative write applied; ``stash`` mirrors them with the (layers, B,
+    L, ...) pre-write values at the touched ring slots; ``n_keep`` (B,)
+    commits the leading rows — 1 + accepted drafts for live slots, 0 for
+    inactive rows (restoring them bit-exactly to their pre-step state).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    n_keep = jnp.asarray(n_keep, jnp.int32)
+
+    def restore(leaf, old):
+        L = old.shape[2]
+        C = leaf.shape[2]
+        pg = pos[:, None] + jnp.arange(L, dtype=jnp.int32)[None, :]
+        slots = (pg % C).astype(jnp.int32)                   # (B, L)
+        rows = jnp.arange(leaf.shape[1])[:, None]
+        keep = jnp.arange(L)[None, :] < n_keep[:, None]      # (B, L)
+        cur = leaf[:, rows, slots]                           # (lyr,B,L,...)
+        sel = keep.reshape((1,) + keep.shape + (1,) * (cur.ndim - 3))
+        return leaf.at[:, rows, slots].set(jnp.where(sel, cur, old))
+
+    return jax.tree_util.tree_map(restore, cache, stash)
+
+
+# ---------------------------------------------------------------------------
 # slotted cache (continuous batching)
 # ---------------------------------------------------------------------------
 

@@ -3,7 +3,9 @@ from repro.serving.sampler import (
     SlotSamplers,
     sample,
     sample_slots,
+    verify_slots,
 )
+from repro.serving.draft import DraftSource, NGramDrafter
 from repro.serving.engine import generate
 from repro.serving.scheduler import ContinuousScheduler
 from repro.serving.server import Completion, Request, RunaheadServer
@@ -13,6 +15,9 @@ __all__ = [
     "SlotSamplers",
     "sample",
     "sample_slots",
+    "verify_slots",
+    "DraftSource",
+    "NGramDrafter",
     "generate",
     "ContinuousScheduler",
     "Request",

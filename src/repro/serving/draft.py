@@ -1,0 +1,72 @@
+"""Draft sources for sequence-level runahead (DESIGN.md §12).
+
+Speculative decoding is the paper's runahead premise applied to the token
+walk itself: a cheap draft source proposes the next ``draft_len - 1``
+tokens, the verify forward scores the whole run in ONE batched step, and
+acceptance is the sign check — the serial chain advances by however many
+drafts survive, plus the one token the model was going to emit anyway.
+
+A draft source runs on the HOST between scheduler steps (it sees only
+token ids, never device state), so anything cheap and causal works.  The
+default is n-gram self-drafting ("prompt lookup"): find the most recent
+earlier occurrence of the current trailing n-gram in the request's own
+history (prompt + emitted tokens) and propose whatever followed it.
+Repetitive workloads — code, structured output, degenerate greedy loops —
+hit this constantly; free-form text falls back to repeating the last
+token, which still wins whenever decoding enters a loop.
+"""
+from __future__ import annotations
+
+from typing import Protocol, Sequence
+
+
+class DraftSource(Protocol):
+    """Callable proposing ``n`` draft tokens after ``history``."""
+
+    def __call__(self, history: Sequence[int], n: int) -> list[int]:
+        """Return EXACTLY ``n`` proposed next tokens (pad however the
+        source likes — wrong guesses only cost rejected verify rows)."""
+        ...
+
+
+class NGramDrafter:
+    """Suffix-match self-drafting over the request's own token history.
+
+    Tries the longest trailing n-gram first (``max_ngram`` down to
+    ``min_ngram``); on a hit, proposes the tokens that followed the MOST
+    RECENT earlier occurrence.  Short continuations are extended by the
+    repeat-last fallback so the proposal always has full length — the
+    verify grid is fixed-shape and an unused row is just a rejected row.
+    """
+
+    def __init__(self, *, min_ngram: int = 1, max_ngram: int = 4):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= max_ngram, got "
+                f"({min_ngram}, {max_ngram})"
+            )
+        self.min_ngram = min_ngram
+        self.max_ngram = max_ngram
+
+    def __call__(self, history: Sequence[int], n: int) -> list[int]:
+        if n <= 0:
+            return []
+        h = list(history)
+        if not h:
+            return [0] * n
+        out: list[int] | None = None
+        for g in range(min(self.max_ngram, len(h) - 1), self.min_ngram - 1,
+                       -1):
+            tail = h[-g:]
+            # most recent earlier occurrence of the trailing g-gram
+            for start in range(len(h) - g - 1, -1, -1):
+                if h[start:start + g] == tail:
+                    out = h[start + g:start + g + n]
+                    break
+            if out:
+                break
+        if out is None:
+            out = []
+        while len(out) < n:                 # repeat-last fallback / pad
+            out.append(out[-1] if out else h[-1])
+        return out[:n]

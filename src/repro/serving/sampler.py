@@ -48,6 +48,7 @@ class SamplerConfig:
     target_entropy: float | None = None   # overrides temperature if set
     top_k: int = 0                        # 0 = off
     top_p: float = 0.0                    # 0 = off
+    greedy: bool = False                  # argmax after the mask pipeline
     spec_k: int = 5                       # speculation depth (paper's k)
     rounds: int = 8
     backend: str = "jnp"                  # "jnp" | "pallas" | "auto" (tuner
@@ -80,6 +81,8 @@ def sample(
         probs = jax.nn.softmax(z, axis=-1)
         z = jnp.where(topp_mask(probs, sc.top_p, **kw), z, NEG_INF)
 
+    if sc.greedy:
+        return jnp.argmax(z, axis=-1).astype(jnp.int32)
     return jax.random.categorical(key, z, axis=-1).astype(jnp.int32)
 
 
@@ -117,6 +120,7 @@ class SlotSamplers(NamedTuple):
     target_entropy: jax.Array    # (B,) f32, NaN = off
     top_k: jax.Array             # (B,) int32, 0 = off
     top_p: jax.Array             # (B,) f32, 0.0 = off
+    greedy: jax.Array            # (B,) bool, argmax instead of categorical
 
     @staticmethod
     def stack(configs: Sequence[SamplerConfig]) -> "SlotSamplers":
@@ -140,7 +144,16 @@ class SlotSamplers(NamedTuple):
                  for c in configs], jnp.float32),
             top_k=jnp.asarray([c.top_k for c in configs], jnp.int32),
             top_p=jnp.asarray([c.top_p for c in configs], jnp.float32),
+            greedy=jnp.asarray([c.greedy for c in configs], bool),
         )
+
+    def tile(self, reps: int) -> "SlotSamplers":
+        """Repeat every per-slot knob ``reps`` times along the batch axis:
+        row b*reps+r of the result carries slot b's parameters — the layout
+        of a flattened (B, reps, V) verify grid.  This is how speculative
+        verification rides the engine's native batch axis: one solve over
+        B*reps rows instead of reps sequential B-row solves."""
+        return SlotSamplers(*(jnp.repeat(f, reps, axis=0) for f in self))
 
 
 def sample_slots(
@@ -153,6 +166,7 @@ def sample_slots(
     backend: str = "jnp",
     enable: tuple[bool, bool, bool] = (True, True, True),
     top_k_static: int | None = None,
+    greedy_only: bool = False,
 ) -> jax.Array:
     """Sample next tokens (B,) int32, one independent stream per slot.
 
@@ -167,7 +181,42 @@ def sample_slots(
     paths a traced (B,) k forfeits (the fused VMEM-resident pallas kernel,
     the known-sign probe skip); idle rows get k-masked too, but their
     tokens are discarded.  Same masked logits bit-for-bit either way.
+
+    ``greedy_only`` (static, from the scheduler): every live slot is
+    greedy, so the categorical draw — dead weight under the outer where —
+    is compiled away entirely.  Token-stream identical either way: the
+    pipeline transforms never move the argmax.
     """
+    z = _masked_slot_logits(logits, slots, spec_k=spec_k, rounds=rounds,
+                            backend=backend, enable=enable,
+                            top_k_static=top_k_static)
+    g = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    if greedy_only:
+        return g
+
+    # Per-row categorical: threefry draws for a (V,) shape are the (1, V)
+    # draws of the scalar path, so row streams are batch-composition
+    # independent — the property one-shot/continuous equivalence rests on.
+    drawn = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row, axis=-1)
+    )(keys, z).astype(jnp.int32)
+    return jnp.where(slots.greedy, g, drawn)
+
+
+def _masked_slot_logits(
+    logits: jax.Array,                 # (R, V) f32, R rows
+    slots: SlotSamplers,               # (R,) per-row knobs
+    *,
+    spec_k: int,
+    rounds: int,
+    backend: str,
+    enable: tuple[bool, bool, bool],
+    top_k_static: int | None,
+) -> jax.Array:
+    """The per-row sampling transform pipeline (entropy temperature /
+    top-k / top-p), shared bit-for-bit by ``sample_slots`` and
+    ``verify_slots`` — one code path is what makes a verify grid's
+    accepted rows reproduce the serial stream exactly."""
     z = logits.astype(jnp.float32)
     z = jnp.maximum(z, jnp.max(z, axis=-1, keepdims=True) - 80.0)
     kw = dict(spec_k=spec_k, rounds=rounds, backend=backend)
@@ -196,10 +245,107 @@ def sample_slots(
         probs = jax.nn.softmax(z, axis=-1)
         mask = topp_mask(probs, p_eff, **kw)
         z = jnp.where(mask | ~on[:, None], z, NEG_INF)
+    return z
 
-    # Per-row categorical: threefry draws for a (V,) shape are the (1, V)
-    # draws of the scalar path, so row streams are batch-composition
-    # independent — the property one-shot/continuous equivalence rests on.
-    return jax.vmap(
-        lambda k, row: jax.random.categorical(k, row, axis=-1)
-    )(keys, z).astype(jnp.int32)
+
+def verify_slots(
+    grid: jax.Array,                   # (B, L, V) f32 verify logits
+    draft: jax.Array,                  # (B, L-1) int32 drafted tokens
+    keys: jax.Array,                   # (B, 2) uint32 per-slot step keys
+    slots: SlotSamplers,
+    *,
+    spec_k: int = 5,
+    rounds: int = 8,
+    backend: str = "jnp",
+    enable: tuple[bool, bool, bool] = (True, True, True),
+    top_k_static: int | None = None,
+    greedy_only: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Accept/reject a drafted run per slot — the paper's sign check at
+    the sequence level (DESIGN.md §12).
+
+    ``grid[:, l]`` scores the token at position pos+l+1 given the fed
+    prefix [t_0, d_1..d_l]; ``draft[:, l]`` is d_{l+1}.  The whole
+    (B, L, V) grid goes through ONE ``_masked_slot_logits`` pipeline as
+    B*L rows (``SlotSamplers.tile``) — every engine solve (entropy /
+    top-k / top-p) answers all L draft depths for all B slots in one
+    batched pass, riding the solver's native batch axis.
+
+    Acceptance, per row:
+      * greedy slots — d_{l+1} accepted while it equals argmax(grid[:, l])
+        (the deterministic sign check; accepted prefix + the first
+        correction token are EXACTLY the serial greedy stream);
+      * sampled slots — drafted-token rejection sampling on the per-slot
+        PRNG chain: accept d with probability p(d) (the masked softmax —
+        the n-gram draft source is a point mass, so min(1, p/q) = p(d)),
+        on rejection draw the replacement from p with d removed
+        (renormalised residual), on full acceptance draw the bonus token
+        from the last grid row.  Streams are deterministic per slot chain
+        and batch-composition independent, but — unlike greedy — not the
+        serial chain's streams (each emitted token costs a different
+        number of threefry draws).
+
+    ``greedy_only`` (static, from the scheduler): every live slot is
+    greedy, so the whole rejection-sampling arm — softmax over the
+    (B, L, V) grid, 2L-way key splits, residual categorical — is dead
+    under the final where and gets compiled away.  At bench scale this
+    is most of the verify step's cost beyond the forward itself.
+
+    Returns (out (B, L) int32, n_acc (B,) int32): row b emits
+    ``out[b, :n_acc[b] + 1]`` — accepted drafts then one sampled token.
+    """
+    B, L, V = grid.shape
+    zf = _masked_slot_logits(
+        grid.reshape(B * L, V), slots.tile(L), spec_k=spec_k, rounds=rounds,
+        backend=backend, enable=enable, top_k_static=top_k_static)
+    zm = zf.reshape(B, L, V)
+    g = jnp.argmax(zm, axis=-1).astype(jnp.int32)            # (B, L)
+
+    if greedy_only:
+        if L > 1:
+            match_g = (draft == g[:, : L - 1]).astype(jnp.int32)
+            n_acc = jnp.sum(jnp.cumprod(match_g, axis=1),
+                            axis=1).astype(jnp.int32)
+        else:
+            n_acc = jnp.zeros((B,), jnp.int32)
+        return g, n_acc
+
+    cols = jnp.arange(L, dtype=jnp.int32)[None, :]           # (1, L)
+    if L > 1:
+        # greedy acceptance: leading run of draft == argmax
+        match_g = draft == g[:, : L - 1]
+
+        # rejection sampling: accept d_l with prob p_l(d_l); 2 draws per
+        # depth (coin, resample) on the slot's step key
+        p = jax.nn.softmax(zm, axis=-1)
+        q_d = jnp.take_along_axis(
+            p[:, : L - 1], draft[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]                                            # (B, L-1)
+        sub = jax.vmap(lambda k: jax.random.split(k, 2 * L))(keys)
+        sub = sub.reshape(B, L, 2, 2)
+        u = jax.vmap(jax.vmap(jax.random.uniform))(sub[:, : L - 1, 0])
+        match_s = u < q_d
+
+        # residual: p with the rejected draft token removed (renormalised
+        # by categorical); depth L-1 has no draft — full distribution
+        hit = (jnp.arange(V, dtype=jnp.int32)[None, None, :]
+               == jnp.pad(draft, ((0, 0), (0, 1)),
+                          constant_values=-1)[..., None])
+        z_res = jnp.where(hit, NEG_INF, zm)
+        s = jax.vmap(jax.vmap(
+            lambda k, row: jax.random.categorical(k, row, axis=-1)
+        ))(sub[:, :, 1], z_res).astype(jnp.int32)            # (B, L)
+
+        match = jnp.where(slots.greedy[:, None], match_g, match_s)
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                        axis=1).astype(jnp.int32)            # (B,)
+        draft_pad = jnp.pad(draft, ((0, 0), (0, 1)))         # (B, L)
+        out_s = jnp.where(cols < n_acc[:, None], draft_pad, s)
+        out = jnp.where(slots.greedy[:, None], g, out_s)
+    else:
+        n_acc = jnp.zeros((B,), jnp.int32)
+        s = jax.vmap(
+            lambda k, row: jax.random.categorical(k, row, axis=-1)
+        )(keys, zm[:, 0]).astype(jnp.int32)
+        out = jnp.where(slots.greedy[:, None], g, s[:, None])
+    return out, n_acc

@@ -43,11 +43,20 @@ from repro.distributed.sharding import (
     resolved_axis_size,
 )
 from repro.models.config import ModelConfig
-from repro.models.decode import decode_step, init_cache, prefill_into_slot
+from repro.models.decode import (
+    decode_step,
+    decode_verify,
+    init_cache,
+    prefill_into_slot,
+    rollback_cache_runs,
+    verify_supported,
+)
+from repro.serving.draft import DraftSource, NGramDrafter
 from repro.serving.sampler import (
     SamplerConfig,
     SlotSamplers,
     sample_slots,
+    verify_slots,
 )
 
 
@@ -93,9 +102,12 @@ class _SlotInfo:
     """Host-side bookkeeping for one occupied slot."""
 
     rid: Any
-    remaining: int                  # decode steps still owed
+    remaining: int                  # tokens still owed
     tokens: list[int]               # emitted so far (includes prefill token)
     sampler: SamplerConfig
+    context: list[int] = dataclasses.field(default_factory=list)
+    # prompt + emitted history, the draft source's lookup corpus
+    eos_id: int | None = None       # stop token (host-side truncation)
 
 
 @dataclasses.dataclass
@@ -106,19 +118,26 @@ class FinishedRequest:
 
 def _enable_bits(configs: list[SamplerConfig]) -> tuple[bool, bool, bool]:
     """(entropy, top_k, top_p) static gates for the compiled step: a solve
-    compiles in only while SOME in-flight request uses it."""
+    compiles in only while SOME in-flight request uses it.
+
+    Greedy rows never need one: argmax is invariant under every transform
+    in the pipeline (temperature is a positive scale, top-k/top-p masks
+    always keep the max element), so an all-greedy batch compiles a
+    solver-free step — the whole sampler is one argmax."""
+    need = [c for c in configs if not c.greedy]
     return (
-        any(c.target_entropy is not None for c in configs),
-        any(c.top_k > 0 for c in configs),
-        any(c.top_p > 0.0 for c in configs),
+        any(c.target_entropy is not None for c in need),
+        any(c.top_k > 0 for c in need),
+        any(c.top_p > 0.0 for c in need),
     )
 
 
 def _static_top_k(configs: list[SamplerConfig]) -> int | None:
-    """The shared top_k when every config agrees on one positive value —
-    lets sample_slots take the static-k fast paths (fused pallas kernel,
-    probe skip)."""
-    ks = {c.top_k for c in configs}
+    """The shared top_k when every solve-needing config agrees on one
+    positive value — lets sample_slots take the static-k fast paths
+    (fused pallas kernel, probe skip).  Greedy rows don't vote (their
+    argmax ignores the mask either way)."""
+    ks = {c.top_k for c in configs if not c.greedy}
     if len(ks) == 1:
         k = ks.pop()
         if k > 0:
@@ -147,28 +166,28 @@ def _admit_slot(params, tokens, cache, slot, key, *, cfg, context,
 @functools.partial(
     jax.jit,
     static_argnames=("spec_k", "rounds", "backend", "enable",
-                     "top_k_static"),
+                     "top_k_static", "greedy_only"),
 )
 def _admit_sample(logits, keys, slots, *, spec_k, rounds, backend, enable,
-                  top_k_static):
+                  top_k_static, greedy_only=False):
     """Jitted first-token sample at admission, through the SAME per-slot
     sampler as the decode step at B=1 — all float knobs are traced, so the
     jit cache is bounded by the (few) static gate combinations, never by
     how many distinct temperatures users pick."""
     return sample_slots(logits, keys, slots, spec_k=spec_k, rounds=rounds,
                         backend=backend, enable=enable,
-                        top_k_static=top_k_static)
+                        top_k_static=top_k_static, greedy_only=greedy_only)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "spec_k", "rounds", "backend", "enable",
-                     "top_k_static", "policy"),
+                     "top_k_static", "policy", "draft_len", "greedy_only"),
     donate_argnames=("token", "pos", "keys", "cache"),
 )
-def _scheduler_step(params, token, pos, keys, active, cache, slots, *,
-                    cfg, spec_k, rounds, backend, enable, top_k_static,
-                    policy=None):
+def _scheduler_step(params, token, pos, keys, active, cache, slots, draft,
+                    *, cfg, spec_k, rounds, backend, enable, top_k_static,
+                    policy=None, draft_len=1, greedy_only=False):
     """THE compiled continuous-batching decode step (module-level so the
     jit cache is shared by every scheduler instance in the process).
 
@@ -184,17 +203,58 @@ def _scheduler_step(params, token, pos, keys, active, cache, slots, *,
     GSPMD batch partitioning, and every sampler solve runs through the
     engine's vocab-sharded shard_map path — token streams bit-identical
     to the single-device step (tests/test_sharded_serving.py).
+
+    ``draft_len`` (static) selects the speculative branch: ``draft``
+    carries (B, draft_len - 1) host-drafted tokens, the forward becomes
+    ONE ``decode_verify`` over the (B, L) grid, acceptance runs through
+    ``verify_slots`` on the engine's batch axis, and rejected cache rows
+    are rolled back.  ``draft_len == 1`` compiles the serial body above
+    UNCHANGED (``draft`` is an unused (B, 0) ride-along) — degeneration
+    to the non-speculative step is bit-exact by construction.
+
+    ``greedy_only`` (static): every live slot is greedy, so the sampler
+    compiles its argmax-only body — no categorical draws, and for the
+    verify branch no rejection-sampling machinery at all.  Key chains
+    still advance identically (splits happen here, not in the sampler),
+    so mixed-occupancy steps later in the same serve stay bit-exact.
+
+    Returns (token, pos, keys, cache, out (B, draft_len), n_acc (B,)):
+    row b emitted ``out[b, :n_acc[b] + 1]``.
     """
-    logits, new_cache = decode_step(cfg, params, token, pos, cache)
-    ks = jax.vmap(jax.random.split)(keys)                   # (B, 2, 2)
+    if draft_len == 1:
+        logits, new_cache = decode_step(cfg, params, token, pos, cache)
+        ks = jax.vmap(jax.random.split)(keys)               # (B, 2, 2)
+        new_keys = jnp.where(active[:, None], ks[:, 0], keys)
+        with solver.mesh_policy(policy):
+            nxt = sample_slots(logits, ks[:, 1], slots, spec_k=spec_k,
+                               rounds=rounds, backend=backend,
+                               enable=enable, top_k_static=top_k_static,
+                               greedy_only=greedy_only)
+        new_token = jnp.where(active, nxt, token)
+        new_pos = jnp.where(active, pos + 1, pos)
+        return (new_token, new_pos, new_keys, new_cache, nxt[:, None],
+                jnp.zeros_like(pos))
+
+    feed = jnp.concatenate([token[:, None], draft], axis=1)  # (B, L)
+    grid, wide_cache, stash = decode_verify(cfg, params, feed, pos, cache)
+    ks = jax.vmap(jax.random.split)(keys)                    # (B, 2, 2)
     new_keys = jnp.where(active[:, None], ks[:, 0], keys)
     with solver.mesh_policy(policy):
-        nxt = sample_slots(logits, ks[:, 1], slots, spec_k=spec_k,
-                           rounds=rounds, backend=backend, enable=enable,
-                           top_k_static=top_k_static)
-    new_token = jnp.where(active, nxt, token)
-    new_pos = jnp.where(active, pos + 1, pos)
-    return new_token, new_pos, new_keys, new_cache, nxt
+        out, n_acc = verify_slots(grid, draft, ks[:, 1], slots,
+                                  spec_k=spec_k, rounds=rounds,
+                                  backend=backend, enable=enable,
+                                  top_k_static=top_k_static,
+                                  greedy_only=greedy_only)
+    n_acc = jnp.where(active, n_acc, 0)
+    # live slots commit 1 + accepted rows; inactive slots (n_keep 0) get
+    # every touched row restored — their state is bit-frozen, as in the
+    # serial branch
+    new_cache = rollback_cache_runs(wide_cache, stash, pos,
+                                    jnp.where(active, 1 + n_acc, 0))
+    bonus = jnp.take_along_axis(out, n_acc[:, None], axis=1)[:, 0]
+    new_token = jnp.where(active, bonus, token)
+    new_pos = jnp.where(active, pos + 1 + n_acc, pos)
+    return new_token, new_pos, new_keys, new_cache, out, n_acc
 
 
 class ContinuousScheduler:
@@ -226,6 +286,8 @@ class ContinuousScheduler:
         backend: str = "jnp",
         cache_dtype=jnp.bfloat16,
         mesh: jax.sharding.Mesh | None = None,
+        draft_len: int = 1,
+        drafter: DraftSource | None = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -234,6 +296,22 @@ class ContinuousScheduler:
         self.spec_k, self.rounds, self.backend = spec_k, rounds, backend
         self.cache_dtype = cache_dtype
         self.mesh = mesh
+        if draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1, got {draft_len}")
+        if draft_len > 1 and not verify_supported(cfg):
+            raise ValueError(
+                "speculative decoding (draft_len > 1) needs an all-dense "
+                "layer stack — this config has recurrent/MoE layers "
+                "(see models.decode.verify_supported)"
+            )
+        if draft_len > context:
+            raise ValueError(
+                f"draft_len {draft_len} exceeds cache capacity {context}"
+            )
+        self.draft_len = draft_len
+        self.drafter: DraftSource = (
+            drafter if drafter is not None else NGramDrafter()
+        )
 
         self.cache = init_cache(cfg, n_slots, context, cache_dtype)
         self.token = jnp.zeros((n_slots,), jnp.int32)
@@ -248,8 +326,17 @@ class ContinuousScheduler:
             )
         self.slots: list[_SlotInfo | None] = [None] * n_slots
         self._finished: list[FinishedRequest] = []
-        self._step_args = None           # (slots_arr, active, enable, k)
+        self._step_args = None     # (slots_arr, active, enable, k, greedy)
         self.n_decode_steps = 0          # batched decode launches (stats)
+        self.n_dispatches = 0            # jitted calls issued (stats)
+        self.n_host_syncs = 0            # device->host reads (stats)
+        self.n_drafted = 0               # drafted tokens offered to verify
+        self.n_accepted = 0              # drafted tokens accepted
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verify step accepted."""
+        return self.n_accepted / self.n_drafted if self.n_drafted else 0.0
 
     # -- occupancy ----------------------------------------------------------
 
@@ -288,6 +375,7 @@ class ContinuousScheduler:
         sampler: SamplerConfig = SamplerConfig(),
         *,
         encoder_frames: jax.Array | None = None,
+        eos_id: int | None = None,
     ) -> bool:
         """Prefill one request into a free slot; False when pool is full.
 
@@ -319,13 +407,20 @@ class ContinuousScheduler:
             spec_k=self.spec_k, rounds=self.rounds, backend=self.backend,
             enable=_enable_bits([sampler]),
             top_k_static=_static_top_k([sampler]),
+            greedy_only=sampler.greedy,
         )[0])
+        self.n_dispatches += 2           # prefill + first-token sample
+        self.n_host_syncs += 1           # int(first)
 
         self.token = self.token.at[i].set(first)
         self.pos = self.pos.at[i].set(prompt.shape[1])
         self.keys = self.keys.at[i].set(key)
-        info = _SlotInfo(rid, n_new - 1, [first], sampler)
-        if info.remaining <= 0:          # n_new == 1: done at admission
+        info = _SlotInfo(
+            rid, n_new - 1, [first], sampler,
+            context=[int(t) for t in np.asarray(prompt[0])] + [first],
+            eos_id=eos_id,
+        )
+        if info.remaining <= 0 or (eos_id is not None and first == eos_id):
             self._finished.append(FinishedRequest(rid, info.tokens))
         else:
             self.slots[i] = info
@@ -334,16 +429,24 @@ class ContinuousScheduler:
 
     # -- the compiled decode step -------------------------------------------
 
-    def step(self) -> dict[Any, int]:
-        """One decode step over every active slot: {rid: token emitted}.
+    def step(self) -> dict[Any, list[int]]:
+        """One decode step over every active slot: {rid: tokens emitted}.
 
         Inactive slots ride along masked out — their token/pos/key stay
         frozen and their cache rows hold dead data until re-admission
         overwrites them — so the launch shape never changes.
+
+        Non-speculative steps emit exactly one token per live slot; with
+        ``draft_len`` L > 1 each live slot emits 1..L tokens (accepted
+        drafts + the verify correction/bonus).  Emitted runs are truncated
+        host-side at the request's remaining budget and at its first
+        ``eos_id`` — truncation always coincides with eviction, so a live
+        slot's device position never diverges from its host history.
         """
         live = [s.sampler for s in self.slots if s is not None]
         if not live:
             return {}
+        L = self.draft_len
         if self._step_args is None:      # occupancy changed since last step
             idle = SamplerConfig(spec_k=self.spec_k, rounds=self.rounds,
                                  backend=self.backend)
@@ -353,27 +456,54 @@ class ContinuousScheduler:
                 jnp.asarray([s is not None for s in self.slots]),
                 _enable_bits(live),
                 _static_top_k(live),
+                all(c.greedy for c in live),
             )
-        slots_arr, active, enable, top_k_static = self._step_args
-        self.token, self.pos, self.keys, self.cache, nxt = _scheduler_step(
+        slots_arr, active, enable, top_k_static, greedy_only = (
+            self._step_args)
+
+        n_live = len(live)
+        if L > 1:                        # host-side draft between steps
+            draft_host = np.zeros((self.n_slots, L - 1), np.int32)
+            for i, info in enumerate(self.slots):
+                if info is not None:
+                    draft_host[i] = self.drafter(info.context, L - 1)
+            draft = jnp.asarray(draft_host)
+        else:
+            draft = jnp.zeros((self.n_slots, 0), jnp.int32)
+
+        (self.token, self.pos, self.keys, self.cache, out,
+         n_acc) = _scheduler_step(
             self.params, self.token, self.pos, self.keys, active,
-            self.cache, slots_arr,
+            self.cache, slots_arr, draft,
             cfg=self.cfg, spec_k=self.spec_k, rounds=self.rounds,
             backend=self.backend, enable=enable, top_k_static=top_k_static,
-            policy=self._policy,
+            policy=self._policy, draft_len=L, greedy_only=greedy_only,
         )
         self.n_decode_steps += 1
+        self.n_dispatches += 1
+        self.n_host_syncs += 1
+        self.n_drafted += (L - 1) * n_live
 
-        emitted: dict[Any, int] = {}
-        nxt_host = np.asarray(nxt)
+        emitted: dict[Any, list[int]] = {}
+        out_host = np.asarray(out)
+        acc_host = np.asarray(n_acc)
         for i, info in enumerate(self.slots):
             if info is None:
                 continue
-            tok = int(nxt_host[i])
-            info.tokens.append(tok)
-            info.remaining -= 1
-            emitted[info.rid] = tok
-            if info.remaining == 0:
+            self.n_accepted += int(acc_host[i])
+            run = [int(t) for t in out_host[i, : int(acc_host[i]) + 1]]
+            done = False
+            if len(run) >= info.remaining:       # budget truncation
+                run = run[: info.remaining]
+                done = True
+            if info.eos_id is not None and info.eos_id in run:
+                run = run[: run.index(info.eos_id) + 1]   # EOS truncation
+                done = True
+            info.tokens.extend(run)
+            info.context.extend(run)
+            info.remaining -= len(run)
+            emitted[info.rid] = run
+            if done:
                 self._finished.append(FinishedRequest(info.rid, info.tokens))
                 self.slots[i] = None                     # evict: slot free
                 self._step_args = None

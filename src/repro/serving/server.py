@@ -40,6 +40,8 @@ class Request:
     seed: int = 0
     sampler: SamplerConfig = dataclasses.field(default_factory=SamplerConfig)
     arrival: int = 0
+    eos_id: int | None = None       # stop early on this token (n_new is
+    # then a budget cap, not an exact length)
 
 
 @dataclasses.dataclass
@@ -76,10 +78,13 @@ class RunaheadServer:
         rounds: int = 8,
         backend: str = "jnp",
         mesh: jax.sharding.Mesh | None = None,
+        draft_len: int = 1,
+        drafter=None,
     ):
         self.scheduler = ContinuousScheduler(
             cfg, params, n_slots=n_slots, context=context,
             spec_k=spec_k, rounds=rounds, backend=backend, mesh=mesh,
+            draft_len=draft_len, drafter=drafter,
         )
         self._pending: deque[Request] = deque()
         self._meta: dict[Any, tuple[int, int, float]] = {}   # rid -> meta
@@ -138,7 +143,8 @@ class RunaheadServer:
         while self._pending and self.scheduler.has_free_slot():
             req = self._pending[0]
             if not self.scheduler.admit(
-                req.rid, req.prompt, req.n_new, req.seed, req.sampler
+                req.rid, req.prompt, req.n_new, req.seed, req.sampler,
+                eos_id=req.eos_id,
             ):
                 break                        # pool filled under us
             self._pending.popleft()
@@ -172,4 +178,7 @@ def generate_oneshot_reference(
         cfg, params, prompt, req.n_new, jax.random.PRNGKey(req.seed),
         context=context, sampler=req.sampler,
     )
-    return [int(t) for t in toks[0]]
+    out = [int(t) for t in toks[0]]
+    if req.eos_id is not None and req.eos_id in out:
+        out = out[: out.index(req.eos_id) + 1]
+    return out

@@ -179,3 +179,196 @@ class TestGenerateFinalToken:
             jax.effects_barrier()
             assert toks.shape == (1, n_new)
             assert len(calls) == n_new - 1, (n_new, len(calls))
+
+
+def _greedy_workload(backend: str = "jnp", n: int = 5) -> list[Request]:
+    """Repetitive greedy requests — the regime n-gram self-drafting
+    predicts well, so verify steps actually accept variable-length runs."""
+    sc = SamplerConfig(backend=backend, greedy=True, top_k=12)
+    pat = [[3, 5, 7], [2, 4, 6], [9, 9, 1], [8, 3, 8], [1, 1, 2]]
+    return [
+        Request(f"g{i}", (pat[i % 5] * 3)[:8], 5 + 2 * (i % 3),
+                seed=100 + i, sampler=sc, arrival=i // 2)
+        for i in range(n)
+    ]
+
+
+class TestSpeculativeDecode:
+    """Sequence-level runahead (DESIGN.md §12): greedy draft-and-verify
+    streams must be BIT-IDENTICAL to greedy serial decode per request."""
+
+    @pytest.fixture(scope="class", autouse=True)
+    def _shed_verify_executables(self):
+        # The verify-grid steps below are the largest executables in the
+        # suite; drop them (and whatever came before) afterwards so later
+        # modules don't push XLA's CPU compiler into its
+        # accumulated-executable segfault (see test_tuning.py).
+        yield
+        jax.clear_caches()
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("draft_len", [2, 4])
+    def test_greedy_spec_matches_serial(self, tiny, backend, draft_len):
+        cfg, params = tiny
+        reqs = _greedy_workload(backend)
+        server = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT,
+                                backend=backend, draft_len=draft_len)
+        done = {c.rid: c for c in server.run(reqs)}
+        for req in reqs:
+            ref = generate_oneshot_reference(cfg, params, req,
+                                             context=CONTEXT)
+            assert done[req.rid].tokens == ref, req.rid
+
+    def test_variable_runs_across_slot_recycling(self, tiny):
+        """The win is real AND the pool recycles: more requests than
+        slots, drafts accepted, fewer verify steps than serial tokens."""
+        cfg, params = tiny
+        reqs = _greedy_workload(n=5)
+        server = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT,
+                                draft_len=4)
+        done = server.run(reqs)
+        sched = server.scheduler
+        assert len(done) == 5 > 2
+        assert sched.n_accepted > 0          # some run longer than 1 token
+        assert 0.0 < sched.acceptance_rate <= 1.0
+        total = sum(len(c.tokens) for c in done)
+        # each request's first token comes from admission; the rest from
+        # verify steps that emit MORE than one token when drafts survive
+        assert sched.n_decode_steps < total - len(done)
+
+    def test_draft_len_one_degenerates_bit_exactly(self, tiny):
+        """draft_len=1 must be the ordinary serial scheduler, including
+        SAMPLED (non-greedy) streams and the key chain."""
+        cfg, params = tiny
+        reqs = _workload()
+        server = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT,
+                                draft_len=1)
+        done = {c.rid: c for c in server.run(reqs)}
+        for req in reqs:
+            ref = generate_oneshot_reference(cfg, params, req,
+                                             context=CONTEXT)
+            assert done[req.rid].tokens == ref, req.rid
+
+    def test_mid_draft_eos_truncates(self, tiny):
+        """EOS landing INSIDE an accepted run must cut the stream there —
+        matching the serial stream truncated at its first EOS."""
+        cfg, params = tiny
+        sc = SamplerConfig(greedy=True, top_k=12)
+        probe = Request("p", [3, 5, 7, 3, 5, 7, 3, 5], 12, seed=5,
+                        sampler=sc)
+        stream = generate_oneshot_reference(cfg, params, probe,
+                                            context=CONTEXT)
+        eos = stream[len(stream) // 2]        # guaranteed mid-stream hit
+        req = dataclasses.replace(probe, eos_id=eos)
+        ref = generate_oneshot_reference(cfg, params, req, context=CONTEXT)
+        assert ref[-1] == eos and len(ref) < probe.n_new
+        server = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT,
+                                draft_len=4)
+        done = server.run([req])
+        assert done[0].tokens == ref
+
+    def test_sampled_spec_deterministic_and_complete(self, tiny):
+        """Non-greedy speculative decoding keeps its own contract: same
+        seeds -> same streams, exact n_new lengths, no cross-slot
+        coupling (two identical servers, different co-residents)."""
+        cfg, params = tiny
+        sc = SamplerConfig(top_k=12)
+        probe = Request("p", [7, 7, 7, 7], 8, seed=1, sampler=sc)
+        outs = []
+        for other_seed in (1, 2):
+            other = Request("o", [5, 9, 2, 6], 8, seed=other_seed,
+                            sampler=sc)
+            server = RunaheadServer(cfg, params, n_slots=2,
+                                    context=CONTEXT, draft_len=3)
+            done = {c.rid: c for c in server.run([probe, other])}
+            assert len(done["p"].tokens) == 8
+            outs.append(done["p"].tokens)
+        assert outs[0] == outs[1]
+
+    def test_rejects_unsupported_arch(self):
+        """Speculation is dense-only: recurrent state has no per-position
+        rollback and MoE capacity couples grid rows through the router."""
+        from repro.models.decode import verify_supported
+
+        moe = reduced_config("qwen2-moe-a2.7b")
+        assert not verify_supported(moe)
+        params = init_params(moe, jax.random.PRNGKey(0), jnp.float32)
+        with pytest.raises(ValueError, match="dense"):
+            ContinuousScheduler(moe, params, n_slots=2, context=CONTEXT,
+                                draft_len=2)
+
+    def test_verify_grid_matches_serial_steps(self, tiny):
+        """decode_verify's row l must reproduce the l-th serial decode
+        step: same argmax decisions, logits equal to decode tolerance,
+        and the all-rejected rollback must restore the cache BIT-exactly."""
+        from repro.models.decode import (
+            decode_step,
+            decode_verify,
+            init_cache,
+            prefill,
+            rollback_cache_runs,
+        )
+
+        cfg, params = tiny
+        toks = jnp.asarray([[1, 2, 3, 4], [9, 8, 7, 6]], jnp.int32)
+        cache = init_cache(cfg, 2, CONTEXT, jnp.float32)
+        _, cache = prefill(cfg, params, toks, CONTEXT,
+                           kv_dtype=jnp.float32)
+        feed = jnp.asarray([[5, 6, 7], [1, 2, 3]], jnp.int32)
+        pos = jnp.asarray([4, 4], jnp.int32)
+        grid, wide, stash = decode_verify(cfg, params, feed, pos, cache)
+
+        serial = []
+        c = cache
+        for l in range(3):
+            lg, c = decode_step(cfg, params, feed[:, l], pos + l, c)
+            serial.append(lg)
+        for l in range(3):
+            np.testing.assert_allclose(grid[:, l], serial[l], atol=1e-4)
+            np.testing.assert_array_equal(
+                jnp.argmax(grid[:, l], -1), jnp.argmax(serial[l], -1))
+
+        # n_keep=0 rollback: the pre-step cache, bit for bit
+        restored = rollback_cache_runs(wide, stash, pos,
+                                       jnp.zeros((2,), jnp.int32))
+        for a, b in zip(jax.tree_util.tree_leaves(restored),
+                        jax.tree_util.tree_leaves(cache)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # full-keep: bit-identical to the serial cache after 3 steps
+        kept = rollback_cache_runs(wide, stash, pos,
+                                   jnp.full((2,), 3, jnp.int32))
+        for a, b in zip(jax.tree_util.tree_leaves(kept),
+                        jax.tree_util.tree_leaves(c)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4)
+
+
+class TestNGramDrafter:
+    def test_suffix_lookup(self):
+        from repro.serving.draft import NGramDrafter
+
+        d = NGramDrafter()
+        assert d([1, 2, 3, 9, 1, 2, 3], 3) == [9, 1, 2]
+
+    def test_repeat_last_fallback(self):
+        from repro.serving.draft import NGramDrafter
+
+        d = NGramDrafter()
+        assert d([5], 3) == [5, 5, 5]
+        assert d([1, 2, 3, 4], 2) == [4, 4]       # no repeat in history
+
+    def test_short_continuation_padded(self):
+        from repro.serving.draft import NGramDrafter
+
+        # match found at the end: continuation shorter than n, padded
+        d = NGramDrafter(min_ngram=1, max_ngram=2)
+        out = d([7, 8, 7, 8], 4)
+        assert len(out) == 4
+        assert out[:2] == [7, 8]
+
+    def test_exact_length_contract(self):
+        from repro.serving.draft import NGramDrafter
+
+        d = NGramDrafter()
+        for n in (0, 1, 5):
+            assert len(d([1, 2, 1, 2, 1], n)) == n

@@ -22,6 +22,16 @@ from repro.core.bisect import find_root_serial
 from repro.core.runahead import runahead_solve
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_caches():
+    # Same remedy as test_tuning.py: by the time this module runs, the
+    # serving suite (speculative verify grids among it) has loaded enough
+    # compiled executables that XLA's CPU compiler deterministically
+    # segfaults on the next large compile.  Shed them first.
+    jax.clear_caches()
+    yield
+
+
 def _logits(B=4, V=600, seed=0, scale=1.0):
     rng = np.random.default_rng(seed)
     return jnp.asarray(rng.normal(size=(B, V)).astype(np.float32) * scale)

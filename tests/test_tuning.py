@@ -251,3 +251,49 @@ def test_budget_always_preserved_by_candidates():
     for _, d in tuning._candidates(_key(iterations=23), OPTIONS, ("jnp",)):
         assert d.rounds * d.spec_k >= 23
         assert (d.rounds - 1) * d.spec_k < 23
+
+
+# ---------------------------------------------------------------------------
+# serving speculation depth (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def test_decision_draft_len_roundtrips_and_defaults():
+    d = tuning.Decision(spec_k=4, rounds=8, placement="single",
+                        backend="jnp", draft_len=5)
+    assert tuning.Decision.from_json(d.to_json()) == d
+    # pre-§12 cache entries carry no draft_len: default to serial decode
+    legacy = dict(d.to_json())
+    legacy.pop("draft_len")
+    assert tuning.Decision.from_json(legacy).draft_len == 1
+
+
+def test_decide_draft_len_zero_acceptance_is_serial():
+    # a=0 prices every draft as rejected work: E(L) = 1 for all L, so any
+    # L > 1 only adds cost and the decision must stay serial
+    assert tuning.decide_draft_len(acceptance=0.0, overhead=5.0) == 1
+
+
+def test_decide_draft_len_monotone_in_acceptance():
+    ls = [tuning.decide_draft_len(acceptance=a, overhead=5.0)
+          for a in (0.0, 0.3, 0.6, 0.9, 0.99)]
+    assert ls == sorted(ls), ls
+    assert ls[-1] > 1
+
+
+def test_decide_draft_len_overhead_deepens_drafts():
+    # dispatch-dominated steps (CPU interpret mode) amortise better over
+    # deep drafts; free dispatch shifts the optimum back toward serial
+    cheap = tuning.decide_draft_len(acceptance=0.6, overhead=0.0)
+    costly = tuning.decide_draft_len(acceptance=0.6, overhead=20.0)
+    assert costly >= cheap
+    assert costly > 1
+
+
+def test_decide_draft_len_respects_cap_and_validates():
+    assert tuning.decide_draft_len(acceptance=0.99, overhead=50.0,
+                                   max_draft_len=3) <= 3
+    with pytest.raises(ValueError):
+        tuning.decide_draft_len(acceptance=1.5)
+    with pytest.raises(ValueError):
+        tuning.decide_draft_len(acceptance=0.5, max_draft_len=0)
