@@ -11,6 +11,14 @@ t=0) is served two ways on the same tiny dense model:
     (``serving.server.RunaheadServer``), so a finished request's lane is
     immediately re-used by the queue.
 
+Two paged-KV cells (DESIGN.md §13) serve a shared-prefix workload —
+families of requests whose prompts agree through several page boundaries
+— first on the dense ring cache, then on the block/page-table cache with
+copy-on-write prefix sharing: same token streams (the paged differential
+is bit-exact), but the paged cell reports peak resident pages, the rows
+fraction vs the dense cache's ``n_slots * context`` pinned footprint, and
+how many prefill tokens the prefix hash skipped outright.
+
 Two further cells put sequence-level runahead on the board (DESIGN.md
 §12): ``continuous_repetitive`` serves a repeated-pattern greedy workload
 serially, ``speculative`` serves the SAME workload with draft-and-verify
@@ -54,6 +62,7 @@ REP_N_NEW_MIN, REP_N_NEW_MAX = 48, 64   # long streams: greedy decode
 # settles into loops the n-gram drafter predicts near-perfectly, so the
 # acceptance aggregate is dominated by the in-loop regime
 REP_CONTEXT = PROMPT_LEN + REP_N_NEW_MAX
+PAGE_SIZE = 4                    # paged cells' page granularity
 
 _PAYLOAD: dict | None = None
 
@@ -139,10 +148,32 @@ def _repetitive_requests(backend: str) -> list[Request]:
     return out
 
 
+def _shared_prefix_requests(backend: str) -> list[Request]:
+    """The workload COW prefix sharing should win: families of requests
+    whose prompts agree through PROMPT_LEN - 4 tokens (three full pages
+    at PAGE_SIZE=4) and diverge only in the final page, so admission
+    forks the shared pages instead of re-prefilling them."""
+    rng = np.random.default_rng(11)
+    sc = SamplerConfig(top_k=TOP_K, backend=backend)
+    out = []
+    for fam in range(3):
+        base = rng.integers(0, VOCAB, size=PROMPT_LEN - 4).tolist()
+        for j in range(3):
+            tail = rng.integers(0, VOCAB, size=4).tolist()
+            out.append(Request(
+                rid=f"f{fam}r{j}", prompt=base + tail,
+                n_new=int(rng.integers(N_NEW_MIN, N_NEW_MAX + 1)),
+                seed=3000 + fam * 3 + j, sampler=sc,
+            ))
+    return out
+
+
 def _run_continuous(cfg, params, reqs: list[Request], backend: str,
-                    draft_len: int = 1, context: int = CONTEXT):
+                    draft_len: int = 1, context: int = CONTEXT,
+                    page_size: int | None = None):
     server = RunaheadServer(cfg, params, n_slots=N_SLOTS, context=context,
-                            backend=backend, draft_len=draft_len)
+                            backend=backend, draft_len=draft_len,
+                            page_size=page_size)
     t0 = time.perf_counter()
     for r in reqs:
         server.submit(r)
@@ -251,6 +282,47 @@ def run() -> list[str]:
             f"speedup={cell['speedup_vs_continuous']}x",
         ))
 
+        # -- paged-KV rows: shared-prefix workload, dense ring baseline
+        # vs page-table cache with COW prefix sharing (streams are
+        # bit-identical; the paged row's win is resident rows + skipped
+        # prefill, not wall time at this toy scale)
+        shared = _shared_prefix_requests(backend)
+        for _ in range(2):
+            wall, useful, lat, sched = _run_continuous(
+                cfg, params, shared, backend)
+            base = _cell("continuous_shared_prefix", backend, wall, useful,
+                         lat, _dispatch_stats(sched))
+        results.append(base)
+        out.append(row(
+            f"serving/continuous_shared_{backend}", 1e6 * base["wall_s"],
+            f"tok_per_s={base['tok_per_s']}",
+        ))
+
+        dense_rows = N_SLOTS * CONTEXT
+        for _ in range(2):
+            wall, useful, lat, sched = _run_continuous(
+                cfg, params, shared, backend, page_size=PAGE_SIZE)
+            cell = _cell(
+                "paged_shared_prefix", backend, wall, useful, lat,
+                {**_dispatch_stats(sched),
+                 "page_size": PAGE_SIZE,
+                 "peak_pages": sched.peak_pages,
+                 "peak_rows": sched.peak_pages * PAGE_SIZE,
+                 "dense_rows": dense_rows,
+                 "rows_frac": round(
+                     sched.peak_pages * PAGE_SIZE / dense_rows, 3),
+                 "prefix_hits": sched.n_prefix_hits,
+                 "prefill_tokens_skipped": sched.n_prefill_skipped},
+            )
+        results.append(cell)
+        out.append(row(
+            f"serving/paged_shared_{backend}", 1e6 * cell["wall_s"],
+            f"tok_per_s={cell['tok_per_s']};"
+            f"peak_pages={cell['peak_pages']};"
+            f"rows_frac={cell['rows_frac']};"
+            f"skipped={cell['prefill_tokens_skipped']}",
+        ))
+
     _PAYLOAD = {
         "bench": "serving",
         "unit": "wall seconds per workload; per-request latency ms",
@@ -259,6 +331,7 @@ def run() -> list[str]:
             "prompt_len": PROMPT_LEN,
             "n_new_range": [N_NEW_MIN, N_NEW_MAX], "top_k": TOP_K,
             "context": CONTEXT, "draft_len": DRAFT_LEN,
+            "page_size": PAGE_SIZE,
             "repetitive_n_new_range": [REP_N_NEW_MIN, REP_N_NEW_MAX],
             "device": jax.default_backend(),
             "pallas_interpret": jax.default_backend() != "tpu",

@@ -72,7 +72,9 @@ from typing import Callable, Mapping, Sequence
 
 import jax
 
-SCHEMA_VERSION = 1
+# v2: ConfigKey grew page_size (the paged-KV cache granularity,
+# DESIGN.md §13) — v1 caches are ignored wholesale rather than migrated
+SCHEMA_VERSION = 2
 CACHE_ENV = "REPRO_TUNING_CACHE"
 DISABLE_ENV = "REPRO_DISABLE_TUNING"
 AUTOTUNE_ENV = "REPRO_AUTOTUNE"
@@ -132,12 +134,17 @@ class ConfigKey:
     device_count: int
     device_kind: str
     iterations: int
+    page_size: int = 0      # paged-KV page granularity; 0 = dense ring
+    # cache.  Part of the key because the paged gather reshapes the
+    # attention working set: a backend/placement winner measured against
+    # the dense layout must not steer a paged deployment (and vice versa).
 
     def cache_key(self) -> str:
         return "|".join((
             self.kind, f"B={self.batch}", f"V={self.vocab}", self.dtype,
             f"pref={self.backend_pref}", f"D={self.device_count}",
             self.device_kind or "cpu", f"iters={self.iterations}",
+            f"page={self.page_size}",
         ))
 
 
@@ -290,6 +297,47 @@ def decide_draft_len(
         if rate > best_rate * (1.0 + 1e-12):
             best_l, best_rate = length, rate
     return best_l
+
+
+def decide_page_size(
+    *,
+    context: int,
+    shared_prefix_len: int = 0,
+    candidates: Sequence[int] = (4, 8, 16, 32),
+    table_overhead_rows: float = 1.0,
+) -> int:
+    """Pick the paged-KV page size for a deployment (DESIGN.md §13).
+
+    Three costs pull in different directions, all priced in cache rows
+    per request so they share a unit:
+
+      * fragmentation — the chain's tail page is half empty on average:
+        ``page_size / 2``;
+      * lost sharing — only whole pages inside the common prompt prefix
+        can be COW-shared, so ``shared_prefix_len % page_size`` rows get
+        re-prefilled per sibling that a finer page would have skipped;
+      * table overhead — each mapped page costs a table entry, a gather
+        index and (pallas) a loop trip: ``table_overhead_rows *
+        ceil(context / page_size)``.
+
+    With no sharing the minimum sits near ``sqrt(2 * overhead *
+    context)``; a shared prefix drags the choice toward its divisors.
+    Ties pick the LARGER page (shorter chains, cheaper admission).
+    """
+    if context < 1:
+        raise ValueError(f"context must be >= 1, got {context}")
+    if shared_prefix_len < 0:
+        raise ValueError(
+            f"shared_prefix_len must be >= 0, got {shared_prefix_len}")
+    if not candidates:
+        raise ValueError("candidates must be non-empty")
+
+    def cost(p: int) -> float:
+        return (p / 2.0
+                + shared_prefix_len % p
+                + table_overhead_rows * -(-context // p))
+
+    return max(sorted(candidates), key=lambda p: (-cost(p), p))
 
 
 def join_term_from_hlo(

@@ -53,6 +53,10 @@ SERVE_RULES.update({
     "cache_seq": "model",
     "kv_heads": None,
     "seq_sp": None,          # decode residual is tiny; keep replicated
+    # the paged KV pool shards its page dim over the data axes: pages are
+    # interchangeable, so data-parallel shards of the pool balance for
+    # free while the table gather stays local per shard (DESIGN.md §13).
+    "page": ("pod", "data"),
 })
 
 

@@ -11,6 +11,7 @@ import jax
 from repro.kernels import multi_count as _mc
 from repro.kernels import multi_entropy as _me
 from repro.kernels import multi_mass as _mm
+from repro.kernels import paged_attend as _pa
 from repro.kernels import runahead_threshold as _rt
 from repro.kernels import taylor_eval as _te
 
@@ -54,3 +55,10 @@ def runahead_topk_threshold(
 def taylor_sincos_eval(x: jax.Array, *, terms: int) -> jax.Array:
     """Speculative-grid evaluation of the paper's sin(cos(x)) Taylor f."""
     return _te.taylor_sincos_eval(x, terms=terms, interpret=_interpret())
+
+
+def paged_attend(pool_k, pool_v, table, pos, q, *, context: int):
+    """Fused paged decode/verify attention over a page-table KV cache —
+    streams each slot's page chain instead of gathering it (§13)."""
+    return _pa.paged_attend(pool_k, pool_v, table, pos, q, context=context,
+                            interpret=_interpret())

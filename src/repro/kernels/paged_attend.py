@@ -1,0 +1,125 @@
+"""Pallas kernel: paged decode/verify attention over a page-table KV cache.
+
+The serving stack's paged cache (DESIGN.md §13) stores K/V in a flat page
+pool ``(n_pages, page_size, n_kv, head_dim)``; a slot's logical ring
+buffer is the concatenation of the pages its table row names.  The jnp
+reference path materialises that gather to (B, context, ...) every step —
+on real hardware that is a full cache copy per token.  This kernel never
+materialises it: each program streams its slot's page chain page by page
+(the page id read from the slot's table row), keeping the online-softmax
+state (m, l, acc) and one (L·R, page_size) score tile in VMEM, the same
+shape of win as ``flash_fwd`` over the dense layout —
+
+    bytes(paged attend) = Q + chain pages touched + O
+
+Grid: (B, n_kv_heads).  GQA rides inside the program: the q block carries
+the head's ``n_rep`` query heads for all L verify positions, so a draft
+run crossing a page boundary is just two iterations of the page loop.
+Masking reproduces dense ``decode_attend``'s per-depth ring validity mask
+(position p_s attendable iff 0 <= p_s <= pos + l), which also kills the
+tail of a final partial page (linear index >= context) and every
+null-page row.
+
+Off-TPU the kernel runs in interpret mode like every other kernel here
+(kernels/ops.py gates).  On TPU the table/pos reads belong in SMEM via
+scalar prefetch (PrefetchScalarGridSpec) so page DMA can be issued ahead
+of the compute — that is the documented Mosaic next step, mirroring
+flash_fwd's bwd-kernel note.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, tab_ref, pos_ref, o_ref, *,
+            context, page_size, n_draft, n_rep, scale):
+    C, P, L, R = context, page_size, n_draft, n_rep
+    D = q_ref.shape[-1]
+    q = q_ref[0, 0].astype(jnp.float32).reshape(L * R, D)    # (L*R, D)
+    pos = pos_ref[0, 0]
+    pq = pos + jax.lax.broadcasted_iota(jnp.int32, (L, 1), 0)  # (L, 1)
+    slot_q = pq % C
+    wraps = pq // C
+    n_chain = tab_ref.shape[1]
+
+    def body(j, carry):
+        m, l, acc = carry
+        pid = tab_ref[0, j]
+        k_pg = k_ref[pl.dslice(pid, 1), :, 0, :][0].astype(jnp.float32)
+        v_pg = v_ref[pl.dslice(pid, 1), :, 0, :][0].astype(jnp.float32)
+        s = q @ k_pg.T * scale                               # (L*R, P)
+        lin = j * P + jax.lax.broadcasted_iota(jnp.int32, (1, P), 1)
+        # dense decode_attend's ring validity at depth pos+l, plus the
+        # partial-last-page cut (lin >= C holds no ring slot at all)
+        p_s = jnp.where(lin <= slot_q, wraps * C + lin,
+                        (wraps - 1) * C + lin)               # (L, P)
+        valid = (p_s >= 0) & (p_s <= pq) & (lin < C)
+        mask = jnp.broadcast_to(valid[:, None, :], (L, R, P))
+        s = jnp.where(mask.reshape(L * R, P), s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + p @ v_pg
+        return m_new, l, acc
+
+    m0 = jnp.full((L * R, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((L * R, 1), jnp.float32)
+    a0 = jnp.zeros((L * R, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_chain, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = out.reshape(L, R, D).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("context", "interpret"))
+def paged_attend(
+    pool_k: jax.Array,       # (n_pages, P, n_kv, hd)
+    pool_v: jax.Array,
+    table: jax.Array,        # (B, max_chain) int32 page ids
+    pos: jax.Array,          # (B,) int32 position of q[:, 0]
+    q: jax.Array,            # (B, L, n_heads, hd) — rope already applied
+    *,
+    context: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused paged decode/verify attention; returns (B, L, n_heads, hd).
+
+    The drafted K/V rows must already be written into the pool (the
+    caller scatters them first, exactly as the dense verify path writes
+    its ring rows before attending).
+    """
+    n_pages, P, nkv, D = pool_k.shape
+    B, L, nq, _ = q.shape
+    R = nq // nkv
+    # kv-major head grouping, the same layout _verify_sdpa reduces in
+    qg = q.reshape(B, L, nkv, R, D).transpose(0, 2, 1, 3, 4)
+    pos2 = jnp.asarray(pos, jnp.int32).reshape(B, 1)
+    n_chain = table.shape[1]
+    kern = functools.partial(
+        _kernel, context=context, page_size=P, n_draft=L, n_rep=R,
+        scale=1.0 / math.sqrt(D),
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, R, D), lambda b, h: (b, h, 0, 0, 0)),
+            pl.BlockSpec((n_pages, P, 1, D), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((n_pages, P, 1, D), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((1, n_chain), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, R, D),
+                               lambda b, h: (b, h, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, L, R, D), q.dtype),
+        interpret=interpret,
+    )(qg, pool_k, pool_v, table, pos2)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, L, nq, D)

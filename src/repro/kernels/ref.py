@@ -51,3 +51,39 @@ def runahead_topk_threshold_ref(
 
 def taylor_sincos_ref(x: jax.Array, *, terms: int) -> jax.Array:
     return taylor_sin(taylor_cos(x.astype(jnp.float32), terms), terms)
+
+
+def paged_attend_ref(
+    pool_k: jax.Array,       # (n_pages, P, n_kv, hd)
+    pool_v: jax.Array,
+    table: jax.Array,        # (B, max_chain) int32 page ids
+    pos: jax.Array,          # (B,) int32 position of q[:, 0]
+    q: jax.Array,            # (B, L, n_heads, hd) — rope already applied
+    *,
+    context: int,
+) -> jax.Array:
+    """jnp gather oracle for the paged attention kernel: concatenate each
+    slot's page chain back into ring order, slice to ``context``, and run
+    the plain masked softmax — element-for-element the dense
+    ``decode_attend`` reduction (DESIGN.md §13)."""
+    n_pages, P, nkv, hd = pool_k.shape
+    B, L, nq, _ = q.shape
+    C = context
+    k = pool_k[table].reshape(B, -1, nkv, hd)[:, :C]         # (B,C,nkv,hd)
+    v = pool_v[table].reshape(B, -1, nkv, hd)[:, :C]
+    pos = jnp.asarray(pos, jnp.int32)
+    pgrid = pos[:, None] + jnp.arange(L, dtype=jnp.int32)[None, :]
+    slots = jnp.arange(C)[None, None, :]
+    pq = pgrid[:, :, None]
+    slot_q = pq % C
+    wraps = (pq // C).astype(jnp.int32)
+    p_s = jnp.where(slots <= slot_q, wraps * C + slots,
+                    (wraps - 1) * C + slots)
+    valid = (p_s >= 0) & (p_s <= pq)                         # (B, L, C)
+    qg = q.reshape(B, L, nkv, nq // nkv, hd)
+    s = jnp.einsum("blhrd,bkhd->bhrlk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrlk,bkhd->blhrd", p, v.astype(jnp.float32))
+    return out.reshape(B, L, nq, hd).astype(q.dtype)

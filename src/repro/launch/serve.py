@@ -21,6 +21,15 @@ BEFORE jax touches the backend) so a laptop can exercise the mesh:
   PYTHONPATH=src python -m repro.launch.serve \
       --arch qwen3-4b --reduced --continuous --mesh 2x4 --host-devices 8 \
       --requests 12 --slots 4
+
+Paged KV cache (DESIGN.md §13): `--page-size` swaps the dense per-slot
+ring for the block/page-table cache — admission allocates pages instead
+of max-context rows and identical prompt prefixes share pages
+copy-on-write; token streams stay bit-identical to the dense path:
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --arch qwen3-4b --reduced --continuous --page-size 16 \
+      --cache-pages 256 --requests 12 --slots 4
 """
 from __future__ import annotations
 
@@ -91,11 +100,17 @@ def _run_continuous(cfg, params, args, sc, mesh=None):
     server = RunaheadServer(
         cfg, params, n_slots=args.slots, context=context,
         spec_k=sc.spec_k, rounds=sc.rounds, backend=sc.backend, mesh=mesh,
-        draft_len=draft_len,
+        draft_len=draft_len, page_size=args.page_size,
+        cache_pages=args.cache_pages, page_impl=args.page_impl,
     )
     if draft_len > 1:
         log.info("speculative decoding on: draft_len=%d (n-gram "
                  "self-drafting)", draft_len)
+    if args.page_size:
+        s = server.scheduler
+        log.info("paged KV cache on: page_size=%d, pool of %d pages "
+                 "(%s impl)", args.page_size, s.alloc.n_pages,
+                 args.page_impl)
     if mesh is not None:
         log.info("mesh-native serving over %s",
                  dict(zip(mesh.axis_names, mesh.devices.shape)))
@@ -134,6 +149,13 @@ def _run_continuous(cfg, params, args, sc, mesh=None):
                  "%.2f tokens/step",
                  s.n_drafted, s.n_accepted, s.acceptance_rate,
                  n_tok / max(1, s.n_decode_steps))
+    if args.page_size:
+        s = server.scheduler
+        log.info("paging: peak %d pages (%d rows vs %d dense), "
+                 "%d prefix hits, %d prefill tokens skipped",
+                 s.peak_pages, s.peak_pages * args.page_size,
+                 args.slots * context, s.n_prefix_hits,
+                 s.n_prefill_skipped)
     for c in sorted(done, key=lambda c: c.rid)[:4]:
         log.info("rid=%s first tokens: %s", c.rid, c.tokens[:8])
     assert len(done) == args.requests
@@ -175,6 +197,17 @@ def main(argv=None):
     ap.add_argument("--draft-len", default="auto",
                     help="[continuous] tokens fed per verify step, or "
                          "'auto' for the tuner's speculation cost model")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="[continuous] KV-cache page size in rows; enables "
+                         "the block/page-table cache with copy-on-write "
+                         "prefix sharing (dense ring when omitted)")
+    ap.add_argument("--cache-pages", type=int, default=None,
+                    help="[continuous] device page-pool size (requires "
+                         "--page-size; default fits slots*context + null)")
+    ap.add_argument("--page-impl", default="gather",
+                    choices=["gather", "pallas"],
+                    help="[continuous] paged-attention impl: jnp gather "
+                         "(bit-exact vs dense) or the fused pallas kernel")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="[continuous] device mesh, e.g. 2x4 = 2-way slot "
                          "data-parallel x 4-way solver vocab sharding")

@@ -587,6 +587,157 @@ def decode_attend_multi(
     return out @ p["wo"].astype(x.dtype), new_cache, stash
 
 
+# ---------------------------------------------------------------------------
+# paged decode path (block/page-table KV cache, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def paged_view(buf: jax.Array, table: jax.Array, context: int) -> jax.Array:
+    """Gather a slot's page chain into the dense ring layout.
+
+    buf: (n_pages, P, ...) page pool; table: (B, max_chain) page ids ->
+    (B, context, ...).  Chain page j holds ring slots [j*P, (j+1)*P), so
+    concatenating the chain and slicing to ``context`` reproduces the
+    dense per-slot ring buffer ELEMENT FOR ELEMENT — the paged attention
+    below reduces over the exact array the dense ``decode_attend`` owns,
+    which is what makes paged streams bit-identical to dense ones.  Tail
+    entries past the last mapped page read the null page; they correspond
+    to positions the validity mask excludes either way.
+    """
+    B = table.shape[0]
+    gathered = buf[table]                        # (B, max_chain, P, ...)
+    flat = gathered.reshape((B, -1) + buf.shape[2:])
+    return flat[:, :context]
+
+
+def _paged_slot_mask(pgrid: jax.Array, context: int) -> jax.Array:
+    """Dense ``decode_attend``'s per-slot validity mask at each query
+    depth.  pgrid: (B, L) absolute positions -> (B, L, C) bool."""
+    C = context
+    slots = jnp.arange(C)[None, None, :]                     # (1,1,C)
+    pq = pgrid[:, :, None]                                   # (B,L,1)
+    slot_q = pq % C
+    wraps = (pq // C).astype(jnp.int32)
+    p_s = jnp.where(slots <= slot_q, wraps * C + slots,
+                    (wraps - 1) * C + slots)
+    return (p_s >= 0) & (p_s <= pq)
+
+
+def paged_decode_attend_multi(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,            # (B, L, D) current token (+ drafted run)
+    pos: jax.Array,          # (B,) int32 absolute position of x[:, 0]
+    cache: KVCache,          # page-pool layout: k/v (n_pages, P, nkv, hd)
+    table: jax.Array,        # (B, max_chain) int32 page ids
+    *,
+    context: int,
+    impl: str = "gather",
+) -> tuple[jax.Array, KVCache, KVCache]:
+    """Verify-grid attention over a page-table cache (L == 1 is the plain
+    decode step).  The dual of ``decode_attend_multi`` with the ring
+    buffer factored through the page table: K/V rows land at (page =
+    table[b, slot // P], offset = slot % P) for ring slot (pos+l) % C —
+    draft runs cross page boundaries exactly like they cross ring slots —
+    and each query reduces over the chain gathered back into ring order
+    (``paged_view``), masked by the serial validity mask at its depth.
+
+    Returns (out (B, L, D'), pool-with-L-rows-written, stash of pre-write
+    values at the touched (page, offset) targets for rollback).
+
+    ``impl``: "gather" (jnp gather + the dense sdpa — bit-identical to
+    dense by construction) or "pallas" (the fused page-streaming kernel,
+    kernels/paged_attend.py; online-softmax reassociation makes it
+    allclose-, not bit-, equal).  Dense all-attention stacks only; int8
+    pools and sliding windows are not paged (see models.decode).
+    """
+    if cache.quantized:
+        raise NotImplementedError("paged cache does not support int8 K/V")
+    B, L, _ = x.shape
+    C = context
+    P = cache.k.shape[1]                     # page size
+    if L > C:
+        raise ValueError(
+            f"draft run length {L} exceeds cache capacity {C}: ring slots "
+            "would collide")
+    q = _project_q(p, cfg, x)                                # (B,L,nq,hd)
+    k_new, v_new = _project_kv(p, cfg, x)                    # (B,L,nkv,hd)
+    pos = jnp.asarray(pos, jnp.int32)
+    pgrid = pos[:, None] + jnp.arange(L, dtype=jnp.int32)[None, :]  # (B,L)
+    if not cfg.learned_pos:
+        q = apply_rope_heads(q, pgrid, cfg.rope_theta)
+        k_new = apply_rope_heads(k_new, pgrid, cfg.rope_theta)
+
+    slots_w = (pgrid % C).astype(jnp.int32)                  # (B, L)
+    rows = jnp.arange(B)[:, None]
+    pages_w = table[rows, slots_w // P]                      # (B, L)
+    offs_w = slots_w % P
+
+    def write(buf, new):                     # (n_pages,P,...) <- (B,L,...)
+        return shard(buf.at[pages_w, offs_w].set(new),
+                     "page", None, "kv_heads", None)
+
+    def keep(buf):                           # pre-write values at targets
+        return buf[pages_w, offs_w]
+
+    stash = KVCache(k=keep(cache.k), v=keep(cache.v))
+    new_cache = KVCache(k=write(cache.k, k_new), v=write(cache.v, v_new))
+
+    mask = _paged_slot_mask(pgrid, C)[:, None, None]         # (B,1,1,L,C)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if impl == "pallas":
+        from repro.kernels.ops import paged_attend
+
+        out = paged_attend(new_cache.k, new_cache.v, table, pos, q,
+                           context=C)
+    elif impl == "gather":
+        k = paged_view(new_cache.k, table, C)                # (B,C,nkv,hd)
+        v = paged_view(new_cache.v, table, C)
+        if L == 1:
+            # serial decode: reduce through the SAME einsum the dense
+            # decode_attend uses, so the paged serial step is bit-equal
+            # to dense by construction, not just by XLA coincidence
+            out = _decode_sdpa(q, k, v, mask[:, :, :, 0], n_rep)
+        else:
+            out = _verify_sdpa(q, k, v, mask, n_rep)
+    else:
+        raise ValueError(f"unknown paged attention impl {impl!r}")
+    out = out.reshape(B, L, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), new_cache, stash
+
+
+def attend_with_prefix(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,            # (B, S_suf, D) suffix activations
+    positions: jax.Array,    # (B, S_suf) absolute positions of the suffix
+    k_pre: jax.Array,        # (B, start, nkv, hd) cached prefix K (roped)
+    v_pre: jax.Array,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Suffix-prefill attention: queries for positions ``[start, S)``
+    over [cached prefix K/V ; the suffix's own K/V] — the prefill-skip
+    forward (DESIGN.md §13).  Key order and values match what a cold
+    full prefill reduces over for the same rows, so suffix activations
+    (and therefore the first-token logits) are bit-identical to cold
+    prefill on substrates with order-stable masked reductions (the CPU
+    CI substrate; the paged guard asserts it).
+    """
+    B, S_suf, _ = x.shape
+    q = _project_q(p, cfg, x)
+    k, v = _project_kv(p, cfg, x)
+    if not cfg.learned_pos:
+        q = apply_rope_heads(q, positions, cfg.rope_theta)
+        k = apply_rope_heads(k, positions, cfg.rope_theta)
+    kf = jnp.concatenate([k_pre.astype(k.dtype), k], axis=1)
+    vf = jnp.concatenate([v_pre.astype(v.dtype), v], axis=1)
+    S = kf.shape[1]
+    qp = positions[:, :, None]                               # (B,S_suf,1)
+    kp = jnp.arange(S, dtype=jnp.int32)[None, None, :]       # (1,1,S)
+    mask = (kp <= qp)[:, None]                               # (B,1,S_suf,S)
+    out = _sdpa(q, kf, vf, mask, cfg.n_heads // cfg.n_kv_heads)
+    out = out.reshape(B, S_suf, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), (k, v)
+
+
 def decode_cross_attend(
     p: Params, cfg: ModelConfig, x: jax.Array, enc_k: jax.Array,
     enc_v: jax.Array,

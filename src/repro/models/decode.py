@@ -455,6 +455,271 @@ def rollback_cache_runs(cache: Cache, stash: list, pos, n_keep) -> Cache:
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache (block/page-table layout, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Whether the paged cache can serve this arch — dense attention
+    stacks only, same gate as ``verify_supported`` (recurrent state has no
+    page structure and SWA rings have their own capacity)."""
+    return all(kind == "dense" for kind, _ in layer_plan(cfg))
+
+
+def init_paged_pool(
+    cfg: ModelConfig, n_pages: int, page_size: int, dtype=jnp.bfloat16
+) -> Cache:
+    """Zero page pool: the paged dual of ``init_cache``.
+
+    Leaves are (layers, n_pages, page_size, n_kv, head_dim) — the batch
+    and context dims of the dense layout are replaced by one flat pool of
+    pages shared by every slot; the (n_slots, max_chain) page table (host
+    side: serving/paged.py) says which pages spell which slot's ring.
+    Page id 0 is the reserved null page.  The page dim carries the "page"
+    logical axis (data-parallel shards of the pool).
+    """
+    if not paged_supported(cfg):
+        raise ValueError(
+            "paged KV cache supports dense layer stacks only (see "
+            "paged_supported)")
+    if dtype == jnp.int8:
+        raise ValueError("paged cache does not support int8 K/V")
+    pool: Cache = []
+    for _, count in layer_plan(cfg):
+        shape = (count, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        pool.append({"kv": KVCache(
+            k=shard(jnp.zeros(shape, dtype), None, "page", None, "kv_heads",
+                    None),
+            v=shard(jnp.zeros(shape, dtype), None, "page", None, "kv_heads",
+                    None),
+        )})
+    return pool
+
+
+def paged_prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                 # (1, S) one request's prompt
+    context: int,
+    pool: Cache,
+    chain: jax.Array,                  # (chain_len,) int32 page ids
+    *,
+    page_size: int,
+    skip: int = 0,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Cache]:
+    """Prefill ONE request into its page chain; the paged admission path.
+
+    ``skip`` pages (``skip * page_size`` leading positions) are already
+    resident — a COW prefix fork found them in the hash (serving/paged.py)
+    — so only the suffix runs a forward: suffix queries attend over
+    [cached prefix K/V ; suffix K/V] (``attend_with_prefix``), which
+    reduces over exactly the key sequence a cold prefill reduces over for
+    the same rows.  ``skip == 0`` IS the cold path: the ordinary B=1
+    ``prefill`` followed by a scatter of its ring rows into the chain's
+    pages.  Either way returns (last-position logits (1, V) f32, pool),
+    bit-identical to each other and to the dense slotted admission on the
+    CPU CI substrate (order-stable masked reductions; paged_guard asserts
+    it).
+
+    ``skip`` is static (admission re-jits per (prompt_len, skip) exactly
+    as the dense path re-jits per prompt_len); ``chain`` is traced, so
+    WHICH pages hold the request never recompiles anything.
+    """
+    B, S = tokens.shape
+    if B != 1:
+        raise ValueError(f"paged_prefill admits one request, got B={B}")
+    if not paged_supported(cfg):
+        raise ValueError(
+            "paged KV cache supports dense layer stacks only (see "
+            "paged_supported)")
+    P = page_size
+    chain = jnp.asarray(chain, jnp.int32)
+    chain_len = chain.shape[0]
+    start = skip * P
+    if not 0 <= start < S:
+        raise ValueError(
+            f"prefix skip {skip} pages covers {start} positions; prompt has "
+            f"{S} (the suffix must recompute at least the last position)")
+
+    if skip == 0:
+        logits, sub = prefill(
+            cfg, params, tokens, context, compute_dtype=compute_dtype,
+        )
+        rows = chain_len * P
+
+        def scatter(pool_leaf, ring_leaf):
+            big = ring_leaf[:, 0]                    # (layers, C, nkv, hd)
+            C = big.shape[1]
+            if rows <= C:
+                big = big[:, :rows]
+            else:
+                big = jnp.pad(
+                    big, ((0, 0), (0, rows - C)) + ((0, 0),) * (big.ndim - 2))
+            big = big.reshape(
+                (big.shape[0], chain_len, P) + big.shape[2:])
+            return pool_leaf.at[:, chain].set(big.astype(pool_leaf.dtype))
+
+        new_pool = [
+            {"kv": KVCache(k=scatter(pe["kv"].k, se["kv"].k),
+                           v=scatter(pe["kv"].v, se["kv"].v))}
+            for pe, se in zip(pool, sub)
+        ]
+        return logits, new_pool
+
+    # -- suffix path: skip pages of prefix K/V are already in the pool ------
+    S_suf = S - start
+    x = embed(params["embed"], tokens[:, start:], compute_dtype)
+    if cfg.learned_pos:
+        x = x + params["pos_embed"].astype(compute_dtype)[None, start:S]
+    positions = jnp.broadcast_to(
+        jnp.arange(start, S, dtype=jnp.int32), (1, S_suf))
+    suf_slots = jnp.arange(start, S, dtype=jnp.int32)        # no wrap: S<=C
+    pages_w = chain[suf_slots // P]                          # (S_suf,)
+    offs_w = suf_slots % P
+    pre = chain[:skip]
+
+    new_pool: Cache = []
+    for run_params, entry, (kind, _) in zip(
+        params["runs"], pool, layer_plan(cfg)
+    ):
+        def body(x, inp):
+            p_l, kv_l = inp
+            eps = cfg.norm_eps
+            k_pre = kv_l.k[pre].reshape(
+                (1, start) + kv_l.k.shape[2:])       # (1, start, nkv, hd)
+            v_pre = kv_l.v[pre].reshape((1, start) + kv_l.v.shape[2:])
+            h = apply_norm(cfg.norm, p_l["ln1"], x, eps)
+            a, (k_suf, v_suf) = attn_lib.attend_with_prefix(
+                p_l["attn"], cfg, h, positions, k_pre, v_pre)
+            x = x + a
+            h = apply_norm(cfg.norm, p_l["ln2"], x, eps)
+            x = x + apply_mlp(cfg.act, p_l["mlp"], h)
+            kv_new = KVCache(
+                k=kv_l.k.at[pages_w, offs_w].set(
+                    k_suf[0].astype(kv_l.k.dtype)),
+                v=kv_l.v.at[pages_w, offs_w].set(
+                    v_suf[0].astype(kv_l.v.dtype)),
+            )
+            return x, kv_new
+
+        x, kv_new = jax.lax.scan(body, x, (run_params, entry["kv"]))
+        new_pool.append({"kv": kv_new})
+
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, x[:, -1], cfg.vocab)
+    return shard(logits, "batch", "vocab"), new_pool
+
+
+def decode_step_paged(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,                  # (B,) int32 current token
+    pos: jax.Array,                    # (B,) int32 per-slot position
+    pool: Cache,
+    table: jax.Array,                  # (B, max_chain) int32 page ids
+    *,
+    context: int,
+    compute_dtype=jnp.bfloat16,
+    impl: str = "gather",
+) -> tuple[jax.Array, Cache]:
+    """One decode step over the page-table cache; the paged dual of
+    ``decode_step`` (per-slot positions, dense stacks only).  Returns
+    (logits (B, V) f32, pool)."""
+    logits, pool, _ = decode_verify_paged(
+        cfg, params, token[:, None], pos, pool, table,
+        context=context, compute_dtype=compute_dtype, impl=impl,
+    )
+    return logits[:, 0], pool
+
+
+def decode_verify_paged(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                 # (B, L): current token + drafted run
+    pos: jax.Array,                    # (B,) int32 position of tokens[:, 0]
+    pool: Cache,
+    table: jax.Array,                  # (B, max_chain) int32 page ids
+    *,
+    context: int,
+    compute_dtype=jnp.bfloat16,
+    impl: str = "gather",
+) -> tuple[jax.Array, Cache, list]:
+    """``decode_verify`` over the page-table cache: score a (B, L) grid in
+    one forward, writing the L K/V rows through each slot's page chain —
+    a draft run crossing a page boundary lands in two pages exactly as it
+    crosses ring slots.  Returns (logits (B, L, V) f32, pool, stash);
+    ``rollback_paged_runs`` restores the rejected rows.
+    """
+    B, L = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    x = embed(params["embed"], tokens, compute_dtype)        # (B, L, D)
+    if cfg.learned_pos:
+        pe = params["pos_embed"].astype(compute_dtype)
+        x = x + pe[pos[:, None] + jnp.arange(L, dtype=jnp.int32)[None, :]]
+
+    new_pool: Cache = []
+    stashes: list = []
+    for run_params, entry, (kind, _) in zip(
+        params["runs"], pool, layer_plan(cfg)
+    ):
+        if kind != "dense":
+            raise ValueError(
+                f"paged decode supports dense layer stacks only, got "
+                f"{kind!r} (see paged_supported)")
+
+        def body(x, inp):
+            p_l, kv_l = inp
+            eps = cfg.norm_eps
+            h = apply_norm(cfg.norm, p_l["ln1"], x, eps)
+            a, kv, st = attn_lib.paged_decode_attend_multi(
+                p_l["attn"], cfg, h, pos, kv_l, table,
+                context=context, impl=impl)
+            x = x + a
+            h = apply_norm(cfg.norm, p_l["ln2"], x, eps)
+            x = x + apply_mlp(cfg.act, p_l["mlp"], h)
+            return x, (kv, st)
+
+        x, (kv_new, st) = jax.lax.scan(body, x, (run_params, entry["kv"]))
+        new_pool.append({"kv": kv_new})
+        stashes.append({"kv": st})
+
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    tab = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(tab, x, cfg.vocab)                      # (B, L, V)
+    return shard(logits, "batch", None, "vocab"), new_pool, stashes
+
+
+def rollback_paged_runs(
+    pool: Cache, stash: list, table: jax.Array, pos, n_keep, *, context: int,
+) -> Cache:
+    """``rollback_cache_runs`` through the page table: pool leaves are
+    (layers, n_pages, P, ...) with the full L-row speculative write
+    applied; ``stash`` holds the (layers, B, L, ...) pre-write values at
+    the touched (page, offset) targets; ``n_keep`` (B,) commits the
+    leading rows and restores the rest bit-exactly.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    n_keep = jnp.asarray(n_keep, jnp.int32)
+    C = context
+
+    def restore(leaf, old):
+        L = old.shape[2]
+        P = leaf.shape[2]
+        pg = pos[:, None] + jnp.arange(L, dtype=jnp.int32)[None, :]
+        slots = (pg % C).astype(jnp.int32)                   # (B, L)
+        rows = jnp.arange(old.shape[1])[:, None]
+        pages = table[rows, slots // P]                      # (B, L)
+        offs = slots % P
+        keep = jnp.arange(L)[None, :] < n_keep[:, None]      # (B, L)
+        cur = leaf[:, pages, offs]                           # (lyr,B,L,...)
+        sel = keep.reshape((1,) + keep.shape + (1,) * (cur.ndim - 3))
+        return leaf.at[:, pages, offs].set(jnp.where(sel, cur, old))
+
+    return jax.tree_util.tree_map(restore, pool, stash)
+
+
+# ---------------------------------------------------------------------------
 # slotted cache (continuous batching)
 # ---------------------------------------------------------------------------
 

@@ -45,13 +45,25 @@ from repro.distributed.sharding import (
 from repro.models.config import ModelConfig
 from repro.models.decode import (
     decode_step,
+    decode_step_paged,
     decode_verify,
+    decode_verify_paged,
     init_cache,
+    init_paged_pool,
+    paged_prefill,
+    paged_supported,
     prefill_into_slot,
     rollback_cache_runs,
+    rollback_paged_runs,
     verify_supported,
 )
 from repro.serving.draft import DraftSource, NGramDrafter
+from repro.serving.paged import (
+    PageAllocator,
+    pages_for,
+    plan_chain,
+    prefix_key,
+)
 from repro.serving.sampler import (
     SamplerConfig,
     SlotSamplers,
@@ -164,6 +176,26 @@ def _admit_slot(params, tokens, cache, slot, key, *, cfg, context,
 
 
 @functools.partial(
+    jax.jit, static_argnames=("cfg", "context", "page_size", "skip"),
+    donate_argnames=("pool",),
+)
+def _admit_paged(params, tokens, pool, chain, key, *, cfg, context,
+                 page_size, skip):
+    """Jitted paged admission: ``paged_prefill`` into the request's page
+    chain plus the first key split.  Compiles once per (cfg, prompt
+    length, chain length, skip) — WHICH pages hold the request is traced
+    data; HOW MANY pages the prefix hash let us skip is static because it
+    changes the forward's shape (the suffix length).  The pool is donated
+    so the scatter happens in place."""
+    logits, pool = paged_prefill(
+        cfg, params, tokens, context, pool, chain,
+        page_size=page_size, skip=skip,
+    )
+    key, sub = jax.random.split(key)
+    return logits, pool, key, sub
+
+
+@functools.partial(
     jax.jit,
     static_argnames=("spec_k", "rounds", "backend", "enable",
                      "top_k_static", "greedy_only"),
@@ -257,6 +289,68 @@ def _scheduler_step(params, token, pos, keys, active, cache, slots, draft,
     return new_token, new_pos, new_keys, new_cache, out, n_acc
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "context", "spec_k", "rounds", "backend",
+                     "enable", "top_k_static", "policy", "draft_len",
+                     "greedy_only", "page_impl"),
+    donate_argnames=("token", "pos", "keys", "pool"),
+)
+def _scheduler_step_paged(params, token, pos, keys, active, pool, table,
+                          slots, draft, *, cfg, context, spec_k, rounds,
+                          backend, enable, top_k_static, policy=None,
+                          draft_len=1, greedy_only=False,
+                          page_impl="gather"):
+    """``_scheduler_step`` over the page-table cache (DESIGN.md §13).
+
+    The dense slotted cache is replaced by (page pool, page table): the
+    forward goes through the paged duals (``decode_step_paged`` /
+    ``decode_verify_paged``) and speculative rollback through
+    ``rollback_paged_runs``; key chains, sampler solves, and the
+    active-slot masking are IDENTICAL to the dense step, which is what
+    keeps paged token streams bit-identical to dense ones.  The table is
+    read-only here (admission/eviction own it) and intentionally not
+    donated; inactive or evicted slots' table rows point at the null page,
+    so their dead per-step writes never touch a live request's pages.
+    """
+    if draft_len == 1:
+        logits, new_pool = decode_step_paged(
+            cfg, params, token, pos, pool, table, context=context,
+            impl=page_impl)
+        ks = jax.vmap(jax.random.split)(keys)               # (B, 2, 2)
+        new_keys = jnp.where(active[:, None], ks[:, 0], keys)
+        with solver.mesh_policy(policy):
+            nxt = sample_slots(logits, ks[:, 1], slots, spec_k=spec_k,
+                               rounds=rounds, backend=backend,
+                               enable=enable, top_k_static=top_k_static,
+                               greedy_only=greedy_only)
+        new_token = jnp.where(active, nxt, token)
+        new_pos = jnp.where(active, pos + 1, pos)
+        return (new_token, new_pos, new_keys, new_pool, nxt[:, None],
+                jnp.zeros_like(pos))
+
+    feed = jnp.concatenate([token[:, None], draft], axis=1)  # (B, L)
+    grid, wide_pool, stash = decode_verify_paged(
+        cfg, params, feed, pos, pool, table, context=context,
+        impl=page_impl)
+    ks = jax.vmap(jax.random.split)(keys)                    # (B, 2, 2)
+    new_keys = jnp.where(active[:, None], ks[:, 0], keys)
+    with solver.mesh_policy(policy):
+        out, n_acc = verify_slots(grid, draft, ks[:, 1], slots,
+                                  spec_k=spec_k, rounds=rounds,
+                                  backend=backend, enable=enable,
+                                  top_k_static=top_k_static,
+                                  greedy_only=greedy_only)
+    n_acc = jnp.where(active, n_acc, 0)
+    new_pool = rollback_paged_runs(
+        wide_pool, stash, table, pos, jnp.where(active, 1 + n_acc, 0),
+        context=context)
+    bonus = jnp.take_along_axis(out, n_acc[:, None], axis=1)[:, 0]
+    new_token = jnp.where(active, bonus, token)
+    new_pos = jnp.where(active, pos + 1 + n_acc, pos)
+    return new_token, new_pos, new_keys, new_pool, out, n_acc
+
+
 class ContinuousScheduler:
     """Slot-based continuous batcher over the runahead sampler.
 
@@ -288,6 +382,9 @@ class ContinuousScheduler:
         mesh: jax.sharding.Mesh | None = None,
         draft_len: int = 1,
         drafter: DraftSource | None = None,
+        page_size: int | None = None,
+        cache_pages: int | None = None,
+        page_impl: str = "gather",
     ):
         self.cfg = cfg
         self.params = params
@@ -313,17 +410,65 @@ class ContinuousScheduler:
             drafter if drafter is not None else NGramDrafter()
         )
 
-        self.cache = init_cache(cfg, n_slots, context, cache_dtype)
+        self.paged = page_size is not None
+        self.page_size = page_size
+        self.page_impl = page_impl
+        if self.paged:
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if page_impl not in ("gather", "pallas"):
+                raise ValueError(f"unknown page_impl {page_impl!r}")
+            if not paged_supported(cfg):
+                raise ValueError(
+                    "the paged KV cache needs an all-dense layer stack "
+                    "(see models.decode.paged_supported)")
+            if cache_dtype == jnp.int8:
+                raise ValueError("paged cache does not support int8 K/V")
+            self.max_chain = pages_for(context, page_size)
+            if cache_pages is None:
+                # dense-equivalent capacity + the reserved null page
+                cache_pages = n_slots * self.max_chain + 1
+            self.cache = None
+            self.pool = init_paged_pool(cfg, cache_pages, page_size,
+                                        cache_dtype)
+            self.table = jnp.zeros((n_slots, self.max_chain), jnp.int32)
+            self.alloc = PageAllocator(cache_pages, page_size)
+            self._chains: list[list[int] | None] = [None] * n_slots
+            self.n_prefix_hits = 0       # admissions that forked a prefix
+            self.n_prefill_skipped = 0   # prompt tokens never re-prefilled
+        else:
+            if cache_pages is not None:
+                raise ValueError("cache_pages requires page_size")
+            self.cache = init_cache(cfg, n_slots, context, cache_dtype)
         self.token = jnp.zeros((n_slots,), jnp.int32)
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
         self._policy = None
         if mesh is not None:
             self._policy, slot_axes = slot_policy(mesh, n_slots)
-            self.token, self.pos, self.keys, self.cache = (
+            self.token, self.pos, self.keys, dense_cache = (
                 _shard_slot_state(mesh, slot_axes, self.token, self.pos,
-                                  self.keys, self.cache)
+                                  self.keys,
+                                  {} if self.paged else self.cache)
             )
+            if self.paged:
+                page_axes = resolve_axes(mesh, SERVE_RULES, "page")
+                n_pg = self.alloc.n_pages
+                if page_axes is not None and n_pg % resolved_axis_size(
+                        mesh, page_axes):
+                    page_axes = None
+                self.pool = jax.tree_util.tree_map(
+                    lambda leaf: jax.device_put(
+                        leaf,
+                        NamedSharding(mesh, P(None, page_axes,
+                                              *(None,) * (leaf.ndim - 2))),
+                    ),
+                    self.pool,
+                )
+                self.table = jax.device_put(
+                    self.table, NamedSharding(mesh, P(None, None)))
+            else:
+                self.cache = dense_cache
         self.slots: list[_SlotInfo | None] = [None] * n_slots
         self._finished: list[FinishedRequest] = []
         self._step_args = None     # (slots_arr, active, enable, k, greedy)
@@ -351,7 +496,13 @@ class ContinuousScheduler:
         done, self._finished = self._finished, []
         return done
 
-    def validate_request(self, n_new: int, sampler: SamplerConfig) -> None:
+    @property
+    def peak_pages(self) -> int:
+        """High-water mark of live pool pages (paged mode; else 0)."""
+        return self.alloc.peak_used if self.paged else 0
+
+    def validate_request(self, n_new: int, sampler: SamplerConfig,
+                         prompt_len: int | None = None) -> None:
         """Reject what the shared compiled step cannot serve — called by
         the server at submit() time, BEFORE a request enters the queue."""
         if n_new < 1:
@@ -363,6 +514,15 @@ class ContinuousScheduler:
                 "request sampler spec_k/rounds/backend must match the "
                 "scheduler's (they are compiled into the shared step)"
             )
+        if self.paged and prompt_len is not None:
+            plan = plan_chain(prompt_len, n_new, self.context,
+                              self.page_size, self.draft_len)
+            if plan.chain_len > self.alloc.n_pages - 1:
+                raise ValueError(
+                    f"request needs {plan.chain_len} pages even with an "
+                    f"empty pool; pool holds {self.alloc.n_pages - 1} "
+                    "(admission could never succeed — raise cache_pages)"
+                )
 
     # -- admission ----------------------------------------------------------
 
@@ -383,13 +543,53 @@ class ContinuousScheduler:
         request at B=1: prefill, split the request key, sample the first
         token from the prefill logits with the request's own config.
         """
-        self.validate_request(n_new, sampler)
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
+        self.validate_request(n_new, sampler, prompt_len=prompt.shape[1])
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
             return False
         i = free[0]
-        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
-        if encoder_frames is None:
+        chain: list[int] | None = None
+        if self.paged:
+            if encoder_frames is not None:
+                raise ValueError("paged cache does not serve enc-dec archs")
+            ptoks = [int(t) for t in np.asarray(prompt[0])]
+            plan = plan_chain(prompt.shape[1], n_new, self.context,
+                              self.page_size, self.draft_len)
+            # longest registered prefix wins: each hit is one page of
+            # prompt K/V admission never recomputes (COW fork)
+            chain = []
+            skip = 0
+            if not plan.wrap:
+                for j in range(1, plan.share_cap + 1):
+                    pid = self.alloc.lookup_prefix(
+                        prefix_key(ptoks, j * self.page_size))
+                    if pid is None:
+                        break
+                    chain.append(pid)
+                skip = len(chain)
+            if skip:
+                self.alloc.fork_prefix(chain)
+                self.n_prefix_hits += 1
+                self.n_prefill_skipped += skip * self.page_size
+            for _ in range(plan.chain_len - skip):
+                pid = self.alloc.alloc()
+                if pid is None:          # pool exhausted: undo, try later
+                    self.alloc.release(chain)
+                    return False
+                chain.append(pid)
+            logits, self.pool, key, sub = _admit_paged(
+                self.params, prompt, self.pool,
+                jnp.asarray(chain, jnp.int32), jax.random.PRNGKey(seed),
+                cfg=self.cfg, context=self.context,
+                page_size=self.page_size, skip=skip,
+            )
+            if not plan.wrap:
+                for j in range(plan.register_cap):
+                    self.alloc.register_prefix(
+                        prefix_key(ptoks, (j + 1) * self.page_size),
+                        chain[j])
+        elif encoder_frames is None:
             logits, self.cache, key, sub = _admit_slot(
                 self.params, prompt, self.cache, jnp.int32(i),
                 jax.random.PRNGKey(seed), cfg=self.cfg,
@@ -422,9 +622,16 @@ class ContinuousScheduler:
         )
         if info.remaining <= 0 or (eos_id is not None and first == eos_id):
             self._finished.append(FinishedRequest(rid, info.tokens))
+            if self.paged:               # done at admission: pages go back
+                self.alloc.release(chain)
         else:
             self.slots[i] = info
             self._step_args = None       # occupancy changed
+            if self.paged:
+                self._chains[i] = chain
+                row = np.zeros((self.max_chain,), np.int32)
+                row[:len(chain)] = chain
+                self.table = self.table.at[i].set(jnp.asarray(row))
         return True
 
     # -- the compiled decode step -------------------------------------------
@@ -471,14 +678,27 @@ class ContinuousScheduler:
         else:
             draft = jnp.zeros((self.n_slots, 0), jnp.int32)
 
-        (self.token, self.pos, self.keys, self.cache, out,
-         n_acc) = _scheduler_step(
-            self.params, self.token, self.pos, self.keys, active,
-            self.cache, slots_arr, draft,
-            cfg=self.cfg, spec_k=self.spec_k, rounds=self.rounds,
-            backend=self.backend, enable=enable, top_k_static=top_k_static,
-            policy=self._policy, draft_len=L, greedy_only=greedy_only,
-        )
+        if self.paged:
+            (self.token, self.pos, self.keys, self.pool, out,
+             n_acc) = _scheduler_step_paged(
+                self.params, self.token, self.pos, self.keys, active,
+                self.pool, self.table, slots_arr, draft,
+                cfg=self.cfg, context=self.context, spec_k=self.spec_k,
+                rounds=self.rounds, backend=self.backend, enable=enable,
+                top_k_static=top_k_static, policy=self._policy,
+                draft_len=L, greedy_only=greedy_only,
+                page_impl=self.page_impl,
+            )
+        else:
+            (self.token, self.pos, self.keys, self.cache, out,
+             n_acc) = _scheduler_step(
+                self.params, self.token, self.pos, self.keys, active,
+                self.cache, slots_arr, draft,
+                cfg=self.cfg, spec_k=self.spec_k, rounds=self.rounds,
+                backend=self.backend, enable=enable,
+                top_k_static=top_k_static, policy=self._policy,
+                draft_len=L, greedy_only=greedy_only,
+            )
         self.n_decode_steps += 1
         self.n_dispatches += 1
         self.n_host_syncs += 1
@@ -507,4 +727,12 @@ class ContinuousScheduler:
                 self._finished.append(FinishedRequest(info.rid, info.tokens))
                 self.slots[i] = None                     # evict: slot free
                 self._step_args = None
+                if self.paged:
+                    # decref the chain (shared prefix pages stay live for
+                    # their other holders) and point the slot's table row
+                    # at the null page so its dead per-step writes can
+                    # never land in a recycled page
+                    self.alloc.release(self._chains[i])
+                    self._chains[i] = None
+                    self.table = self.table.at[i].set(0)
         return emitted

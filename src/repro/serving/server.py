@@ -80,11 +80,16 @@ class RunaheadServer:
         mesh: jax.sharding.Mesh | None = None,
         draft_len: int = 1,
         drafter=None,
+        page_size: int | None = None,
+        cache_pages: int | None = None,
+        page_impl: str = "gather",
     ):
         self.scheduler = ContinuousScheduler(
             cfg, params, n_slots=n_slots, context=context,
             spec_k=spec_k, rounds=rounds, backend=backend, mesh=mesh,
             draft_len=draft_len, drafter=drafter,
+            page_size=page_size, cache_pages=cache_pages,
+            page_impl=page_impl,
         )
         self._pending: deque[Request] = deque()
         self._meta: dict[Any, tuple[int, int, float]] = {}   # rid -> meta
@@ -99,7 +104,8 @@ class RunaheadServer:
             )
         # reject unservable requests HERE, before they enter the queue —
         # a late failure inside _admit_pending would lose the request
-        self.scheduler.validate_request(req.n_new, req.sampler)
+        self.scheduler.validate_request(req.n_new, req.sampler,
+                                        prompt_len=len(req.prompt))
         self._pending.append(req)
         self._meta[req.rid] = (self._step_idx, -1, time.time())
 

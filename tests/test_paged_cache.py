@@ -1,0 +1,582 @@
+"""Paged KV cache (DESIGN.md §13): allocator invariants (property/fuzz),
+paged-vs-dense-vs-oneshot serving differentials, copy-on-write prefix
+reuse, and paged-attention kernel parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.kernels.paged_attend import paged_attend
+from repro.kernels.ref import paged_attend_ref
+from repro.models.decode import (
+    decode_step,
+    decode_step_paged,
+    init_cache,
+    init_paged_pool,
+    paged_prefill,
+    paged_supported,
+    prefill_into_slot,
+)
+from repro.models.testing import reduced_config
+from repro.models.transformer import init_params
+from repro.serving.paged import (
+    PageAllocator,
+    pages_for,
+    plan_chain,
+    prefix_key,
+)
+from repro.serving.sampler import SamplerConfig
+from repro.serving.server import (
+    Request,
+    RunaheadServer,
+    generate_oneshot_reference,
+)
+
+CONTEXT = 24
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """Tiny DENSE model (the paged cache serves dense stacks only)."""
+    cfg = dataclasses.replace(
+        reduced_config("internlm2-1.8b"), n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_head=16, d_ff=64, vocab=128,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _workload(backend: str = "jnp") -> list[Request]:
+    """Heterogeneous samplers, n_new spanning 1 (finishes at admission) to
+    8, more requests than slots — forces queueing and slot recycling."""
+    sc = lambda **kw: SamplerConfig(backend=backend, **kw)
+    return [
+        Request("a", [1, 2, 3, 4], 5, seed=11, sampler=sc(top_k=12)),
+        Request("b", [9, 8, 7, 6, 5], 3, seed=22, sampler=sc(top_p=0.9)),
+        Request("c", [4, 4, 4], 1, seed=33, sampler=sc(temperature=0.7)),
+        Request("d", [2, 3, 5, 7, 11, 13], 8, seed=44, sampler=sc()),
+        Request("e", [6, 6], 6, seed=55, sampler=sc(greedy=True)),
+    ]
+
+
+def _serve(cfg, params, reqs, **kw):
+    srv = RunaheadServer(cfg, params, context=CONTEXT, **kw)
+    for r in reqs:
+        srv.submit(dataclasses.replace(r))
+    done = srv.drain()
+    return {c.rid: c.tokens for c in done}, srv.scheduler
+
+
+# ---------------------------------------------------------------------------
+# chain geometry
+# ---------------------------------------------------------------------------
+
+class TestPlanChain:
+    def test_pages_for(self):
+        assert pages_for(1, 4) == 1
+        assert pages_for(4, 4) == 1
+        assert pages_for(5, 4) == 2
+        assert pages_for(12, 5) == 3
+
+    def test_no_wrap_geometry(self):
+        # prompt 10, 6 new, draft 1: deepest written position is
+        # prompt + n_new - 2 = 14 -> 15 positions
+        plan = plan_chain(10, 6, 32, 4)
+        assert not plan.wrap
+        assert plan.n_positions == 15 and plan.chain_len == 4
+
+    def test_draft_overshoot_reserved(self):
+        # speculative verify writes up to draft_len - 1 rows past the last
+        # serial position (14 + 3 = 17); the chain must hold them
+        assert plan_chain(10, 6, 32, 4, draft_len=4).n_positions == 18
+
+    def test_wrap_disables_sharing(self):
+        plan = plan_chain(10, 40, 32, 4)
+        assert plan.wrap
+        assert plan.share_cap == 0 and plan.register_cap == 0
+        assert plan.chain_len == pages_for(32, 4)
+
+    def test_share_cap_stops_short_of_prompt_end(self):
+        # page-aligned prompt: the LAST prompt page is never forked — its
+        # final position must be recomputed for the first-token logits
+        plan = plan_chain(12, 4, 32, 4)
+        assert plan.share_cap == 2 and plan.register_cap == 3
+        # unaligned prompt: the partial page is mutable (decode continues
+        # into it), so it is neither shared nor registered
+        plan = plan_chain(13, 4, 32, 4)
+        assert plan.share_cap == 3 and plan.register_cap == 3
+
+    def test_n_new_one_writes_prompt_only(self):
+        assert plan_chain(8, 1, 32, 4).n_positions == 8
+
+
+# ---------------------------------------------------------------------------
+# allocator: deterministic invariants
+# ---------------------------------------------------------------------------
+
+class TestAllocator:
+    def test_never_hands_out_null_page(self):
+        a = PageAllocator(8, 4)
+        got = [a.alloc() for _ in range(10)]
+        assert 0 not in got
+        assert got[7:] == [None] * 3            # 7 allocatable pages
+        assert sorted(p for p in got if p is not None) == list(range(1, 8))
+
+    def test_free_recycles(self):
+        a = PageAllocator(4, 4)
+        p1 = a.alloc()
+        assert a.decref(p1) is True
+        assert a.n_free == 3 and a.refcount(p1) == 0
+        assert a.alloc() is not None
+
+    def test_double_free_raises(self):
+        a = PageAllocator(4, 4)
+        p = a.alloc()
+        a.decref(p)
+        with pytest.raises(ValueError, match="double free"):
+            a.decref(p)
+
+    def test_incref_dead_raises(self):
+        a = PageAllocator(4, 4)
+        with pytest.raises(ValueError, match="dead page"):
+            a.incref(2)
+
+    def test_shared_page_survives_one_release(self):
+        a = PageAllocator(8, 4)
+        chain = [a.alloc(), a.alloc()]
+        a.register_prefix(("k",), chain[0])
+        forked = a.fork_prefix(chain)
+        assert a.refcount(chain[0]) == 2
+        a.release(forked)
+        assert a.refcount(chain[0]) == 1        # original holder remains
+        a.release(chain)
+        assert a.n_used == 0
+
+    def test_free_retracts_registration(self):
+        a = PageAllocator(8, 4)
+        p = a.alloc()
+        a.register_prefix((1, 2, 3, 4), p)
+        assert a.lookup_prefix((1, 2, 3, 4)) == p
+        a.decref(p)
+        assert a.lookup_prefix((1, 2, 3, 4)) is None
+        # the recycled id can be re-registered under a new key
+        p2 = a.alloc()
+        a.register_prefix((9,), p2)
+        assert a.lookup_prefix((9,)) == p2
+
+    def test_first_registration_wins(self):
+        a = PageAllocator(8, 4)
+        p1, p2 = a.alloc(), a.alloc()
+        a.register_prefix(("x",), p1)
+        a.register_prefix(("x",), p2)           # no-op, not an override
+        assert a.lookup_prefix(("x",)) == p1
+
+    def test_peak_used_high_water(self):
+        a = PageAllocator(8, 4)
+        ps = [a.alloc() for _ in range(5)]
+        for p in ps:
+            a.decref(p)
+        assert a.peak_used == 5 and a.n_used == 0
+
+
+# ---------------------------------------------------------------------------
+# allocator: fuzz (deterministic floor + hypothesis when available)
+# ---------------------------------------------------------------------------
+
+def _fuzz_allocator(seed: int, steps: int = 200) -> None:
+    """Random alloc / release / register / fork walk, checking after every
+    op: no leaked or double-freed pages (conservation), per-page refcounts
+    equal the model's live reference count, the free list and the live set
+    are disjoint, and the null page is never touched."""
+    rng = np.random.default_rng(seed)
+    n_pages = int(rng.integers(2, 20))
+    a = PageAllocator(n_pages, 4)
+    chains: list[list[int]] = []       # live reference-holding chains
+    registered: list[tuple] = []
+
+    for step in range(steps):
+        op = rng.integers(0, 4)
+        if op == 0:                                    # admit: fresh chain
+            want = int(rng.integers(1, 4))
+            chain = []
+            for _ in range(want):
+                pid = a.alloc()
+                if pid is None:
+                    break
+                chain.append(pid)
+            if chain:
+                chains.append(chain)
+        elif op == 1 and chains:                       # evict
+            a.release(chains.pop(int(rng.integers(len(chains)))))
+        elif op == 2 and chains:                       # register a page
+            chain = chains[int(rng.integers(len(chains)))]
+            key = ("k", step)
+            a.register_prefix(key, chain[0])
+            registered.append(key)
+        elif op == 3 and registered:                   # fork via the hash
+            key = registered[int(rng.integers(len(registered)))]
+            pid = a.lookup_prefix(key)
+            if pid is not None:
+                chains.append(a.fork_prefix([pid]))
+
+        # -- invariants ----------------------------------------------------
+        model_refs: dict[int, int] = {}
+        for chain in chains:
+            for pid in chain:
+                model_refs[pid] = model_refs.get(pid, 0) + 1
+        live = set(model_refs)
+        assert 0 not in live
+        assert a.n_used == len(live)                   # no leak, no loss
+        assert a.n_used + a.n_free == n_pages - 1      # conservation
+        for pid in range(1, n_pages):
+            assert a.refcount(pid) == model_refs.get(pid, 0)
+        assert live.isdisjoint(a._free)
+
+    for chain in chains:                               # full teardown
+        a.release(chain)
+    assert a.n_used == 0 and a.n_free == n_pages - 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7, 2024])
+def test_allocator_fuzz_deterministic(seed):
+    _fuzz_allocator(seed)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_allocator_fuzz_property(seed):
+    _fuzz_allocator(seed, steps=60)
+
+
+# ---------------------------------------------------------------------------
+# serving differentials: paged == dense == one-shot, bit-identical
+# ---------------------------------------------------------------------------
+
+class TestPagedDifferential:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("page_size", [4, 5])
+    def test_paged_matches_dense_and_oneshot(self, tiny, backend,
+                                             page_size):
+        """Both solver backends, page sizes that do (4) and don't (5)
+        divide context=24, with slot recycling (5 requests on 2 slots)."""
+        cfg, params = tiny
+        reqs = _workload(backend)
+        dense, _ = _serve(cfg, params, reqs, n_slots=2, backend=backend)
+        paged, _ = _serve(cfg, params, reqs, n_slots=2, backend=backend,
+                          page_size=page_size)
+        assert paged == dense
+        for r in reqs:
+            assert paged[r.rid] == generate_oneshot_reference(
+                cfg, params, r, context=CONTEXT)
+
+    def test_speculative_rollback_across_page_boundary(self, tiny):
+        """draft_len=4 on page_size=3: almost every verify grid straddles
+        a page boundary, and greedy speculative streams must still equal
+        plain greedy serial (dense AND paged)."""
+        cfg, params = tiny
+        reqs = [Request(f"g{i}", [1 + i, 2, 3], 9, seed=i,
+                        sampler=SamplerConfig(greedy=True))
+                for i in range(4)]
+        serial, _ = _serve(cfg, params, reqs, n_slots=2)
+        spec_paged, sch = _serve(cfg, params, reqs, n_slots=2, draft_len=4,
+                                 page_size=3)
+        assert spec_paged == serial
+        assert sch.n_decode_steps > 0
+
+    def test_speculative_paged_matches_speculative_dense(self, tiny):
+        """Stochastic sampling: rejection sampling preserves the sampling
+        DISTRIBUTION, not the serial stream, so the contract is paged
+        speculative == dense speculative, bit for bit."""
+        cfg, params = tiny
+        reqs = _workload()
+        dense, _ = _serve(cfg, params, reqs, n_slots=2, draft_len=3)
+        paged, _ = _serve(cfg, params, reqs, n_slots=2, draft_len=3,
+                          page_size=4)
+        assert paged == dense
+
+    def test_mid_draft_eos(self, tiny):
+        """An eos landing inside an accepted draft run truncates the
+        emitted run and evicts — identically for dense and paged."""
+        cfg, params = tiny
+        base = [Request(f"m{i}", [3 + i, 1, 4, 1], 10, seed=5 + i,
+                        sampler=SamplerConfig(greedy=True))
+                for i in range(3)]
+        probe, _ = _serve(cfg, params, base, n_slots=2)
+        # pick each request's mid-stream token as its stop token, so the
+        # eos fires inside a draft_len=4 run rather than at its edge
+        reqs = [dataclasses.replace(r, eos_id=probe[r.rid][4])
+                for r in base]
+        dense, _ = _serve(cfg, params, reqs, n_slots=2, draft_len=4)
+        paged, sch = _serve(cfg, params, reqs, n_slots=2, draft_len=4,
+                            page_size=3)
+        assert paged == dense
+        for r in reqs:
+            assert paged[r.rid][-1] == r.eos_id
+            assert len(paged[r.rid]) < 10
+        assert sch.alloc.n_used == 0            # every page came back
+
+    def test_pallas_page_impl_allclose(self, tiny):
+        """The fused kernel path serves real streams; online-softmax
+        reassociation means allclose-level, so greedy streams (argmax is
+        reassociation-tolerant at this scale) should match exactly while
+        the contract-grade bit-exact path stays impl='gather'."""
+        cfg, params = tiny
+        reqs = [Request(f"p{i}", [2 + i, 7, 5], 6, seed=i,
+                        sampler=SamplerConfig(greedy=True))
+                for i in range(3)]
+        gather, _ = _serve(cfg, params, reqs, n_slots=2, page_size=4)
+        pallas, _ = _serve(cfg, params, reqs, n_slots=2, page_size=4,
+                           page_impl="pallas")
+        assert pallas == gather
+
+    def test_pool_exhaustion_queues_without_deadlock(self, tiny):
+        """A pool too small for all requests at once admits what fits,
+        parks the rest, and completes everything as pages free."""
+        cfg, params = tiny
+        reqs = _workload()
+        dense, _ = _serve(cfg, params, reqs, n_slots=2)
+        # each request needs <= pages_for(ctx) = 6 pages; 8 usable pages
+        # cannot hold two worst-case requests concurrently
+        paged, sch = _serve(cfg, params, reqs, n_slots=2, page_size=4,
+                            cache_pages=9)
+        assert paged == dense
+        assert sch.alloc.n_used == 0
+
+    def test_never_fitting_request_rejected_at_submit(self, tiny):
+        cfg, params = tiny
+        srv = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT,
+                             page_size=4, cache_pages=3)
+        with pytest.raises(ValueError, match="never succeed"):
+            srv.submit(Request("big", list(range(1, 16)), 8, seed=0))
+
+    def test_paged_rejects_unsupported(self, tiny):
+        cfg, params = tiny
+        hybrid = reduced_config("hymba-1.5b")
+        assert not paged_supported(hybrid)
+        with pytest.raises(ValueError, match="dense"):
+            RunaheadServer(hybrid, params, n_slots=2, context=CONTEXT,
+                           page_size=4)
+        with pytest.raises(ValueError, match="int8"):
+            init_paged_pool(cfg, 8, 4, jnp.int8)
+        with pytest.raises(ValueError, match="cache_pages requires"):
+            RunaheadServer(cfg, params, n_slots=2, context=CONTEXT,
+                           cache_pages=16)
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write prefix reuse
+# ---------------------------------------------------------------------------
+
+PRE = list(range(1, 13))                        # 12-token shared prefix
+
+
+class TestPrefixReuse:
+    def test_shared_prefix_allocates_once_and_skips_prefill(self, tiny):
+        cfg, params = tiny
+        reqs = [Request(f"s{i}", PRE + [50 + i], 6, seed=7 + i)
+                for i in range(3)]
+        dense, _ = _serve(cfg, params, reqs, n_slots=3)
+        srv = RunaheadServer(cfg, params, n_slots=3, context=CONTEXT,
+                             page_size=4)
+        for r in reqs:
+            srv.submit(dataclasses.replace(r))
+        srv._admit_pending()                     # all three slots occupied
+        sch = srv.scheduler
+        # share_cap((12+1)-token prompts, P=4) = 3: requests 2 and 3 fork
+        # all three full prefix pages and never re-prefill those tokens
+        assert sch.n_prefix_hits == 2
+        assert sch.n_prefill_skipped == 2 * 3 * 4
+        # chain accounting: 5 pages each (17 positions), 3 shared by all
+        chains = [c for c in sch._chains if c is not None]
+        assert len(chains) == 3
+        shared = set(chains[0][:3])
+        for c in chains[1:]:
+            assert c[:3] == chains[0][:3]        # the SAME page ids
+            assert not shared & set(c[3:])       # private tails
+        assert all(sch.alloc.refcount(p) == 3 for p in shared)
+        # distinct pages resident: 3 shared + 3 * 2 private
+        assert sch.alloc.n_used == 3 + 3 * 2
+        paged = {c.rid: c.tokens for c in srv.drain()}
+        assert paged == dense                    # prefill-skip bit-exact
+
+    def test_cow_fork_never_mutates_shared_pages(self, tiny):
+        """Fork + the forker's whole decode leave the shared pages'
+        device content bit-untouched."""
+        cfg, params = tiny
+        srv = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT,
+                             page_size=4)
+        srv.submit(Request("orig", PRE + [99], 6, seed=1))
+        srv._admit_pending()
+        sch = srv.scheduler
+        shared_ids = jnp.asarray(sch._chains[0][:3], jnp.int32)
+        snap = [(np.asarray(e["kv"].k[:, shared_ids]),
+                 np.asarray(e["kv"].v[:, shared_ids])) for e in sch.pool]
+        srv.submit(Request("fork", PRE + [42], 6, seed=2))
+        srv.drain()
+        assert sch.n_prefix_hits == 1
+        for entry, (k0, v0) in zip(sch.pool, snap):
+            assert np.array_equal(np.asarray(entry["kv"].k[:, shared_ids]),
+                                  k0)
+            assert np.array_equal(np.asarray(entry["kv"].v[:, shared_ids]),
+                                  v0)
+
+    def test_eviction_keeps_sharers_pages_live(self, tiny):
+        """The first holder finishing (and releasing its chain) must not
+        free pages its sharer still reads — the survivor's remaining
+        stream stays bit-identical to its solo run."""
+        cfg, params = tiny
+        short = Request("short", PRE + [50], 2, seed=3)
+        long = Request("long", PRE + [60], 10, seed=4)
+        dense, _ = _serve(cfg, params, [short, long], n_slots=2)
+        paged, sch = _serve(cfg, params, [short, long], n_slots=2,
+                            page_size=4)
+        assert paged == dense
+        assert len(paged["short"]) == 2 and len(paged["long"]) == 10
+        assert sch.n_prefix_hits == 1
+        assert sch.alloc.n_used == 0             # full teardown at the end
+
+    def test_registration_survives_original_eviction(self, tiny):
+        """A sharer holding forked pages keeps them registered: a THIRD
+        identical prefix admitted after the original evicted still hits."""
+        cfg, params = tiny
+        srv = RunaheadServer(cfg, params, n_slots=2, context=CONTEXT,
+                             page_size=4)
+        srv.submit(Request("r1", PRE + [1], 2, seed=1))    # finishes first
+        srv.submit(Request("r2", PRE + [2], 12, seed=2))   # long holder
+        srv.submit(Request("r3", PRE + [3], 3, seed=3))    # queued
+        srv.drain()
+        sch = srv.scheduler
+        # r2 forks from r1's registration; r1 evicts, but r2's refs keep
+        # the pages (and their hash entries) alive, so r3 — admitted into
+        # r1's recycled slot — still hits the prefix
+        assert sch.n_prefix_hits == 2
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+def _random_paged_state(seed, n_pages, P, nkv, hd, B, L, nq, chain_len):
+    rng = np.random.default_rng(seed)
+    pk = jnp.asarray(rng.standard_normal((n_pages, P, nkv, hd)),
+                     jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((n_pages, P, nkv, hd)),
+                     jnp.float32)
+    perm = rng.permutation(n_pages - 1)[:B * chain_len] + 1
+    table = jnp.asarray(perm.reshape(B, chain_len), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, L, nq, hd)), jnp.float32)
+    return pk, pv, table, q
+
+
+class TestPagedKernel:
+    @pytest.mark.parametrize("P,C", [(4, 8), (5, 8), (3, 10)])
+    def test_pallas_matches_ref(self, P, C):
+        """Page sizes that divide (4|8) and don't (5∤8, 3∤10) the context,
+        positions below and above the wrap point."""
+        chain_len = pages_for(C, P)
+        pk, pv, table, q = _random_paged_state(
+            0, 3 * chain_len + 1, P, 2, 16, 3, 4, 4, chain_len)
+        pos = jnp.asarray([2, C - 2, C + 3], jnp.int32)      # row 3 wraps
+        ref = paged_attend_ref(pk, pv, table, pos, q, context=C)
+        out = paged_attend(pk, pv, table, pos, q, context=C,
+                           interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_gqa_and_single_query(self):
+        """n_rep=3 grouped heads, L=1 (the serial decode shape)."""
+        pk, pv, table, q = _random_paged_state(1, 7, 4, 2, 8, 2, 1, 6, 2)
+        pos = jnp.asarray([3, 7], jnp.int32)
+        ref = paged_attend_ref(pk, pv, table, pos, q, context=8)
+        out = paged_attend(pk, pv, table, pos, q, context=8,
+                           interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("page_size", [4, 5])
+    def test_gather_path_bit_equal_to_dense(self, tiny, page_size):
+        """On a contiguous chain holding the same rows, the paged gather
+        decode step produces BIT-identical logits to the dense slotted
+        step — the serving contract's foundation."""
+        cfg, params = tiny
+        prompt = jnp.asarray([[5, 3, 8, 2, 6, 1, 9]], jnp.int32)
+        S = prompt.shape[1]
+        dense_cache = init_cache(cfg, 1, CONTEXT, jnp.bfloat16)
+        dlogits, dense_cache = prefill_into_slot(
+            cfg, params, prompt, CONTEXT, dense_cache, 0)
+        chain_len = pages_for(
+            plan_chain(S, 4, CONTEXT, page_size).n_positions, page_size)
+        pool = init_paged_pool(cfg, chain_len + 1, page_size, jnp.bfloat16)
+        chain = jnp.arange(1, chain_len + 1, dtype=jnp.int32)
+        plogits, pool = paged_prefill(
+            cfg, params, prompt, CONTEXT, pool, chain,
+            page_size=page_size)
+        assert np.array_equal(np.asarray(dlogits), np.asarray(plogits))
+        table = jnp.zeros((1, pages_for(CONTEXT, page_size)), jnp.int32
+                          ).at[0, :chain_len].set(chain)
+        tok = jnp.asarray([7], jnp.int32)
+        pos = jnp.asarray([S], jnp.int32)
+        dstep, _ = decode_step(cfg, params, tok, pos, dense_cache)
+        pstep, _ = decode_step_paged(cfg, params, tok, pos, pool, table,
+                                     context=CONTEXT)
+        assert np.array_equal(np.asarray(dstep), np.asarray(pstep))
+
+    def test_prefill_skip_bit_equal_to_cold(self, tiny):
+        """Suffix prefill over cached prefix pages reproduces the cold
+        prefill's first-token logits bit-for-bit (the COW fork's
+        correctness contract on the CPU substrate)."""
+        cfg, params = tiny
+        P = 4
+        prompt = jnp.asarray([PRE + [77]], jnp.int32)
+        chain_len = pages_for(
+            plan_chain(prompt.shape[1], 4, CONTEXT, P).n_positions, P)
+        pool = init_paged_pool(cfg, 2 * chain_len + 1, P, jnp.bfloat16)
+        chain = jnp.arange(1, chain_len + 1, dtype=jnp.int32)
+        cold, pool = paged_prefill(cfg, params, prompt, CONTEXT, pool,
+                                   chain, page_size=P)
+        # fork: first 3 pages shared, fresh tail, skip their prefill
+        chain2 = jnp.concatenate([
+            chain[:3], jnp.arange(chain_len + 1, 2 * chain_len - 2,
+                                  dtype=jnp.int32)])
+        warm, pool = paged_prefill(cfg, params, prompt, CONTEXT, pool,
+                                   chain2, page_size=P, skip=3)
+        assert np.array_equal(np.asarray(cold), np.asarray(warm))
+
+
+class TestPageSizeTuning:
+    """The tuner's page-size knob: ConfigKey carries it (a paged winner
+    never steers a dense deployment) and decide_page_size trades
+    fragmentation vs sharing granularity vs table overhead."""
+
+    def test_config_key_distinguishes_page_size(self):
+        from repro.core.tuning import ConfigKey
+        base = dict(kind="count_above", batch=4, vocab=256,
+                    dtype="float32", backend_pref="jnp", device_count=1,
+                    device_kind="cpu", iterations=40)
+        dense = ConfigKey(**base)
+        paged = ConfigKey(**base, page_size=16)
+        assert dense.page_size == 0          # default: dense ring cache
+        assert dense.cache_key() != paged.cache_key()
+        assert "page=16" in paged.cache_key()
+
+    def test_decide_page_size_prefers_prefix_divisors(self):
+        from repro.core.tuning import decide_page_size
+        # a 16-token shared prefix drags the choice onto its divisors:
+        # page 8 shares all 16 rows, page 32 would share none
+        assert decide_page_size(context=48, shared_prefix_len=16) == 8
+        # no sharing: the fragmentation/table-overhead tradeoff alone
+        # pushes toward large pages as context grows
+        assert decide_page_size(context=512) == 32
+        assert decide_page_size(context=512, shared_prefix_len=24) == 16
+
+    def test_decide_page_size_validates(self):
+        from repro.core.tuning import decide_page_size
+        with pytest.raises(ValueError):
+            decide_page_size(context=0)
+        with pytest.raises(ValueError):
+            decide_page_size(context=8, shared_prefix_len=-1)
+        with pytest.raises(ValueError):
+            decide_page_size(context=8, candidates=())
