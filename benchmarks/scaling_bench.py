@@ -10,7 +10,10 @@ measuring both engine backends:
     collective-overhead regime — on one CPU socket the collective is a
     memcpy, so expect overhead-dominated numbers, shape only);
   * serving throughput — the continuous-batching server slot-sharded over
-    a (d, 1) mesh (pure data parallelism; d=1 is the meshless baseline).
+    a (d, 1) mesh (pure data parallelism; d=1 is the meshless baseline),
+    measured per-step AND fused (``step_horizon=4``, DESIGN.md §14) so
+    the dispatch-amortization trajectory is on the board per device
+    count alongside per-cell dispatch/host-sync counts.
 
 Every (devices, backend) cell is measured twice: ``policy=fixed`` under
 ``tuning.disabled()`` (the legacy hard-coded vocab-sharded path — the
@@ -55,6 +58,7 @@ _SCRIPT = textwrap.dedent("""
     B, V, K = 8, 8192, 50
     ROUNDS, SPEC_K = 6, 4
     N_SLOTS, N_REQ, PROMPT, NEW = 8, 10, 8, 8
+    HZ = 4                        # fused cells' steps per dispatch
 
     x = jax.random.normal(jax.random.PRNGKey(0), (B, V), jnp.float32)
     mesh_v = make_mesh_compat((1, D), ("data", "model"))
@@ -140,6 +144,35 @@ _SCRIPT = textwrap.dedent("""
             serving_wall_s=round(wall, 3),
             serving_tok_per_s=round(toks / wall, 2),
             decode_steps=server.scheduler.n_decode_steps,
+            dispatches=server.scheduler.n_dispatches,
+            host_syncs=server.scheduler.n_host_syncs,
+        )), flush=True)
+
+        # fused-horizon serving cell: same workload with K=HZ decode
+        # steps per compiled dispatch — the per-device-count view of the
+        # dispatch amortization (streams identical; the interesting
+        # trajectory is dispatches vs the per-step row above)
+        server_f = RunaheadServer(
+            cfg, params, n_slots=N_SLOTS, context=PROMPT + NEW,
+            backend=backend, mesh=mesh_s if D > 1 else None,
+            step_horizon=HZ)
+        with tuning.disabled():
+            t0 = time.perf_counter()
+            for r in reqs:
+                server_f.submit(r)
+            done_f = server_f.drain()
+            wall_f = time.perf_counter() - t0
+        toks_f = sum(len(c.tokens) for c in done_f)
+        sf = server_f.scheduler
+        print("CELL " + json.dumps(dict(
+            cell_env, devices=D, backend=backend, policy="fused",
+            step_horizon=HZ,
+            serving_wall_s=round(wall_f, 3),
+            serving_tok_per_s=round(toks_f / wall_f, 2),
+            decode_steps=sf.n_decode_steps,
+            dispatches=sf.n_dispatches,
+            host_syncs=sf.n_host_syncs,
+            wasted_steps=sf.n_wasted_steps,
         )), flush=True)
 """)
 
@@ -185,6 +218,14 @@ def run() -> list[str]:
                     f"spec_k={dec.get('spec_k')};"
                     f"source={dec.get('source')}",
                 ))
+            elif c.get("policy") == "fused":
+                out.append(row(
+                    f"scaling/d{d}_{c['backend']}_fused",
+                    1e6 * c["serving_wall_s"],
+                    f"serve_tok_per_s={c['serving_tok_per_s']};"
+                    f"dispatches={c['dispatches']};"
+                    f"hz={c['step_horizon']}",
+                ))
             else:
                 out.append(row(
                     f"scaling/d{d}_{c['backend']}", c["solver_round_us"],
@@ -198,7 +239,7 @@ def run() -> list[str]:
         "config": {
             "device_counts": list(DEVICE_COUNTS),
             "backends": list(BACKENDS),
-            "policies": ["fixed", "tuned"],
+            "policies": ["fixed", "tuned", "fused"],
             "solver": {"batch": 8, "vocab": 8192, "k": 50,
                        "rounds": 6, "spec_k": 4,
                        "mesh": "(1, d) vocab-sharded"},

@@ -28,6 +28,15 @@ drafted-vs-accepted counts.  Every continuous cell also reports dispatch
 and host-sync counts — the per-token launch overhead that explains the
 pallas continuous-vs-oneshot gap.
 
+Two fused-horizon cells (DESIGN.md §14) attack that overhead directly:
+``fused`` re-serves the continuous workload with ``step_horizon=8`` (K
+decode steps per compiled dispatch, host sync only at horizon
+boundaries) and ``fused_speculative`` re-serves the repetitive workload
+with repeat-last device drafting under the same horizon — identical
+token streams, ~K× fewer dispatches; the cells report the dispatch
+ratio vs their per-step baselines and the all-idle horizon iterations
+wasted to boundary quantisation.
+
 Per the harness convention each (mode, backend) cell runs twice and the
 second, jit-warm execution is reported.  Emits ``BENCH_serving.json``:
 throughput plus p50/p99 per-request latency for every cell, jnp AND
@@ -45,6 +54,7 @@ import numpy as np
 from benchmarks.common import row
 from repro.models.testing import reduced_config
 from repro.models.transformer import init_params
+from repro.serving.draft import RepeatLastDrafter
 from repro.serving.engine import generate
 from repro.serving.sampler import SamplerConfig
 from repro.serving.server import Request, RunaheadServer
@@ -63,6 +73,7 @@ REP_N_NEW_MIN, REP_N_NEW_MAX = 48, 64   # long streams: greedy decode
 # acceptance aggregate is dominated by the in-loop regime
 REP_CONTEXT = PROMPT_LEN + REP_N_NEW_MAX
 PAGE_SIZE = 4                    # paged cells' page granularity
+STEP_HORIZON = 8                 # fused cells' decode steps per dispatch
 
 _PAYLOAD: dict | None = None
 
@@ -170,10 +181,12 @@ def _shared_prefix_requests(backend: str) -> list[Request]:
 
 def _run_continuous(cfg, params, reqs: list[Request], backend: str,
                     draft_len: int = 1, context: int = CONTEXT,
-                    page_size: int | None = None):
+                    page_size: int | None = None, step_horizon: int = 1,
+                    drafter=None):
     server = RunaheadServer(cfg, params, n_slots=N_SLOTS, context=context,
                             backend=backend, draft_len=draft_len,
-                            page_size=page_size)
+                            page_size=page_size, step_horizon=step_horizon,
+                            drafter=drafter)
     t0 = time.perf_counter()
     for r in reqs:
         server.submit(r)
@@ -193,6 +206,8 @@ def _dispatch_stats(sched) -> dict:
         "decode_steps": sched.n_decode_steps,
         "dispatches": sched.n_dispatches,
         "host_syncs": sched.n_host_syncs,
+        "horizons": sched.n_horizons,
+        "admissions": sched.n_admissions,
         "decoded_row_tokens": sched.n_decode_steps * N_SLOTS,
     }
 
@@ -237,12 +252,39 @@ def run() -> list[str]:
                 cfg, params, reqs, backend)
             cell = _cell("continuous", backend, wall, useful, lat,
                          _dispatch_stats(sched))
+        cont = cell
         results.append(cell)
         out.append(row(
             f"serving/continuous_{backend}", 1e6 * cell["wall_s"],
             f"tok_per_s={cell['tok_per_s']};"
             f"p99_ms={cell['latency_p99_ms']};"
             f"decode_steps={sched.n_decode_steps}",
+        ))
+
+        # -- fused-horizon row: same workload, K decode steps per compiled
+        # dispatch (streams are bit-identical; the win is the dispatch
+        # ratio, which the wall-time speedup tracks once steps are
+        # launch-bound)
+        for _ in range(2):
+            wall, useful, lat, sched = _run_continuous(
+                cfg, params, reqs, backend, step_horizon=STEP_HORIZON)
+            cell = _cell(
+                "fused", backend, wall, useful, lat,
+                {**_dispatch_stats(sched),
+                 "step_horizon": STEP_HORIZON,
+                 "wasted_steps": sched.n_wasted_steps,
+                 "dispatch_ratio_vs_continuous": round(
+                     sched.n_dispatches / cont["dispatches"], 3),
+                 "speedup_vs_continuous": round(
+                     (useful / wall) / cont["tok_per_s"], 2)},
+            )
+        results.append(cell)
+        out.append(row(
+            f"serving/fused_{backend}", 1e6 * cell["wall_s"],
+            f"tok_per_s={cell['tok_per_s']};"
+            f"dispatches={cell['dispatches']};"
+            f"ratio={cell['dispatch_ratio_vs_continuous']};"
+            f"speedup={cell['speedup_vs_continuous']}x",
         ))
 
         # -- speculative rows: repetitive workload, continuous baseline
@@ -274,11 +316,44 @@ def run() -> list[str]:
                  "speedup_vs_continuous": round(
                      (useful / wall) / base["tok_per_s"], 2)},
             )
+        spec = cell
         results.append(cell)
         out.append(row(
             f"serving/speculative_{backend}", 1e6 * cell["wall_s"],
             f"tok_per_s={cell['tok_per_s']};"
             f"accept={cell['acceptance_rate']};"
+            f"speedup={cell['speedup_vs_continuous']}x",
+        ))
+
+        # -- fused speculative row: same repetitive workload, K verify
+        # steps per dispatch with repeat-last device drafting (host
+        # drafters cannot run mid-scan, so this trades the n-gram
+        # drafter's acceptance for the horizon's dispatch amortization)
+        for _ in range(2):
+            wall, useful, lat, sched = _run_continuous(
+                cfg, params, rep, backend, draft_len=DRAFT_LEN,
+                context=REP_CONTEXT, step_horizon=STEP_HORIZON,
+                drafter=RepeatLastDrafter())
+            cell = _cell(
+                "fused_speculative", backend, wall, useful, lat,
+                {**_dispatch_stats(sched),
+                 "draft_len": DRAFT_LEN,
+                 "step_horizon": STEP_HORIZON,
+                 "wasted_steps": sched.n_wasted_steps,
+                 "drafted": sched.n_drafted,
+                 "accepted": sched.n_accepted,
+                 "acceptance_rate": round(sched.acceptance_rate, 3),
+                 "dispatch_ratio_vs_speculative": round(
+                     sched.n_dispatches / spec["dispatches"], 3),
+                 "speedup_vs_continuous": round(
+                     (useful / wall) / base["tok_per_s"], 2)},
+            )
+        results.append(cell)
+        out.append(row(
+            f"serving/fused_spec_{backend}", 1e6 * cell["wall_s"],
+            f"tok_per_s={cell['tok_per_s']};"
+            f"accept={cell['acceptance_rate']};"
+            f"dispatches={cell['dispatches']};"
             f"speedup={cell['speedup_vs_continuous']}x",
         ))
 
@@ -331,7 +406,7 @@ def run() -> list[str]:
             "prompt_len": PROMPT_LEN,
             "n_new_range": [N_NEW_MIN, N_NEW_MAX], "top_k": TOP_K,
             "context": CONTEXT, "draft_len": DRAFT_LEN,
-            "page_size": PAGE_SIZE,
+            "page_size": PAGE_SIZE, "step_horizon": STEP_HORIZON,
             "repetitive_n_new_range": [REP_N_NEW_MIN, REP_N_NEW_MAX],
             "device": jax.default_backend(),
             "pallas_interpret": jax.default_backend() != "tpu",

@@ -74,7 +74,17 @@ import jax
 
 # v2: ConfigKey grew page_size (the paged-KV cache granularity,
 # DESIGN.md §13) — v1 caches are ignored wholesale rather than migrated
-SCHEMA_VERSION = 2
+# v3: ConfigKey grew step_horizon (the fused serving horizon, DESIGN.md
+# §14) and Decision grew the chosen step_horizon — v2 caches likewise
+# ignored wholesale
+SCHEMA_VERSION = 3
+
+# Fixed per-decode-step serving cost (dispatch + host sync) in units of
+# one grid row's forward work, calibrated from BENCH_serving.json's
+# continuous cells on the CPU box (see decide_draft_len).  Shared by
+# decide_draft_len and decide_step_horizon so both knobs price the same
+# overhead they are amortizing.
+DISPATCH_OVERHEAD = 4.3
 CACHE_ENV = "REPRO_TUNING_CACHE"
 DISABLE_ENV = "REPRO_DISABLE_TUNING"
 AUTOTUNE_ENV = "REPRO_AUTOTUNE"
@@ -108,6 +118,10 @@ class Decision:
     # tokens fed per verify step, 1 = serial decode.  Unlike spec_k this
     # knob is workload-sensitive (acceptance rate), so it is decided by
     # decide_draft_len from observed acceptance, not the roofline model.
+    step_horizon: int = 1       # fused serving horizon (DESIGN.md §14):
+    # decode steps per compiled scan dispatch, 1 = per-step serving.
+    # Decided by decide_step_horizon from expected remaining budget —
+    # another workload-priced knob, like draft_len.
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -119,6 +133,7 @@ class Decision:
             placement=str(d["placement"]), backend=str(d["backend"]),
             source=str(d.get("source", "cache")),
             draft_len=int(d.get("draft_len", 1)),
+            step_horizon=int(d.get("step_horizon", 1)),
         )
 
 
@@ -138,13 +153,17 @@ class ConfigKey:
     # cache.  Part of the key because the paged gather reshapes the
     # attention working set: a backend/placement winner measured against
     # the dense layout must not steer a paged deployment (and vice versa).
+    step_horizon: int = 0   # fused serving horizon; 0 = per-step / not
+    # serving.  Part of the key because a K-fused scan changes what XLA
+    # sees per dispatch (loop-hoisted constants, donation patterns): a
+    # winner measured per-step must not steer a fused deployment.
 
     def cache_key(self) -> str:
         return "|".join((
             self.kind, f"B={self.batch}", f"V={self.vocab}", self.dtype,
             f"pref={self.backend_pref}", f"D={self.device_count}",
             self.device_kind or "cpu", f"iters={self.iterations}",
-            f"page={self.page_size}",
+            f"page={self.page_size}", f"hz={self.step_horizon}",
         ))
 
 
@@ -288,7 +307,7 @@ def decide_draft_len(
     if max_draft_len < 1:
         raise ValueError(f"max_draft_len must be >= 1, got {max_draft_len}")
     if overhead is None:
-        overhead = 4.3 * token_cost
+        overhead = DISPATCH_OVERHEAD * token_cost
     a = min(acceptance, 1.0 - 1e-9)
     best_l, best_rate = 1, 0.0
     for length in range(1, max_draft_len + 1):
@@ -297,6 +316,56 @@ def decide_draft_len(
         if rate > best_rate * (1.0 + 1e-12):
             best_l, best_rate = length, rate
     return best_l
+
+
+def decide_step_horizon(
+    *,
+    mean_remaining: float,
+    token_cost: float = 1.0,
+    overhead: float | None = None,
+    load: float = 1.0,
+    max_horizon: int = 64,
+) -> int:
+    """Pick K, the decode steps fused per serving dispatch (DESIGN.md §14).
+
+    The amortization the paper demands, priced against its risk: fusing K
+    steps into one scan divides the fixed per-step cost (``overhead``, in
+    ``token_cost`` units — the same dispatch + host-sync constant
+    ``decide_draft_len`` amortizes) by K, but a request finishing
+    mid-horizon rides frozen until the boundary, wasting ``(K - 1) / 2``
+    slot-iterations in expectation per completed request.  Against a mean
+    per-request budget of ``mean_remaining`` device iterations, the
+    useful fraction of slot work is ``m / (m + load * (K - 1) / 2)``
+    (``load`` scales how much boundary idling displaces real work: 1.0
+    when a queue is waiting for every freed slot, 0.0 when slots would
+    idle anyway), and per-iteration cost is ``token_cost + overhead / K``
+    — K maximises their ratio.  Ties break toward SMALLER K (admission
+    latency: a queued request waits up to K iterations for a boundary).
+
+    Degenerations behave: ``overhead = 0`` returns 1 (nothing to
+    amortize), ``load = 0`` returns ``max_horizon`` (idle slots make
+    amortization free), and K shrinks with the budget — short tails
+    amortize less than long ones (though even ``mean_remaining = 1``
+    tolerates a small K: halving a 4.3-token dispatch tax is worth half
+    a wasted iteration).
+    """
+    if mean_remaining < 1:
+        raise ValueError(
+            f"mean_remaining must be >= 1, got {mean_remaining}")
+    if max_horizon < 1:
+        raise ValueError(f"max_horizon must be >= 1, got {max_horizon}")
+    if not 0.0 <= load <= 1.0:
+        raise ValueError(f"load must be in [0, 1], got {load}")
+    if overhead is None:
+        overhead = DISPATCH_OVERHEAD * token_cost
+    best_k, best_rate = 1, 0.0
+    for k in range(1, max_horizon + 1):
+        idle = load * (k - 1) / 2.0
+        useful = mean_remaining / (mean_remaining + idle)
+        rate = useful / (token_cost + overhead / k)
+        if rate > best_rate * (1.0 + 1e-12):
+            best_k, best_rate = k, rate
+    return best_k
 
 
 def decide_page_size(
@@ -577,9 +646,14 @@ class Tuner:
                 d = Decision.from_json(hit["decision"])
             except (KeyError, TypeError, ValueError):
                 d = None
-            # a cached placement must still be legal on THIS mesh
+            # a cached replay must still be legal: the placement on THIS
+            # mesh, the backend in the caller's set, and every budget
+            # knob a sane positive value (a hand-edited or corrupted
+            # entry must never steer the solver)
             if d is not None and d.placement in options \
-                    and d.backend in backends:
+                    and d.backend in backends \
+                    and d.spec_k >= 1 and d.rounds >= 1 \
+                    and d.draft_len >= 1 and d.step_horizon >= 1:
                 return dataclasses.replace(d, source="cache")
 
         ranked = _candidates(key, options, backends)

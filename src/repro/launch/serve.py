@@ -30,6 +30,16 @@ copy-on-write; token streams stay bit-identical to the dense path:
   PYTHONPATH=src python -m repro.launch.serve \
       --arch qwen3-4b --reduced --continuous --page-size 16 \
       --cache-pages 256 --requests 12 --slots 4
+
+Fused decode horizons (DESIGN.md §14): `--step-horizon K` compiles K
+decode steps into ONE lax.scan dispatch — EOS/budget freezing happens
+on-device, host admission/eviction runs at horizon boundaries, and token
+streams stay bit-identical to per-step serving ('auto' prices K off the
+dispatch-amortization cost model):
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --arch qwen3-4b --reduced --continuous --step-horizon auto \
+      --requests 12 --slots 4
 """
 from __future__ import annotations
 
@@ -91,21 +101,62 @@ def _resolve_draft_len(args, cfg) -> int:
     return decide_draft_len(acceptance=0.6)
 
 
+def _resolve_step_horizon(args, draft_len: int) -> int:
+    """--step-horizon N pins K; 'auto' asks decide_step_horizon with the
+    workload's expected per-request budget (in device iterations: the
+    token budget shrunk by speculation's expected tokens/step)."""
+    if args.step_horizon != "auto":
+        k = int(args.step_horizon)
+        if k < 1:
+            raise SystemExit(f"--step-horizon must be >= 1, got {k}")
+        return k
+    from repro.core.tuning import decide_step_horizon
+
+    # requests draw n_new uniformly from [new_tokens/2, new_tokens]
+    mean_tokens = max(1.0, 0.75 * args.new_tokens)
+    per_step = 1.0 + 0.6 * (draft_len - 1)      # the same prior as
+    # --draft-len auto; the live counters refine it via
+    # scheduler.suggested_step_horizon between serves
+    return decide_step_horizon(
+        mean_remaining=max(1.0, mean_tokens / per_step))
+
+
 def _run_continuous(cfg, params, args, sc, mesh=None):
     if cfg.is_encdec:
         raise SystemExit("--continuous does not drive enc-dec archs yet")
     rng = np.random.default_rng(args.seed)
     context = args.prompt_len + args.new_tokens
     draft_len = _resolve_draft_len(args, cfg)
+    step_horizon = _resolve_step_horizon(args, draft_len)
+    drafter = None
+    if step_horizon > 1 and draft_len > 1:
+        # fused horizons draft on-device: repeat-last replaces the n-gram
+        # host drafter (weaker drafts, but the horizon amortizes the
+        # dispatch cost n-gram drafting was competing against)
+        from repro.serving.draft import RepeatLastDrafter
+
+        drafter = RepeatLastDrafter()
+        log.info("fused speculative serving: n-gram drafter replaced by "
+                 "device-side repeat-last (host drafters cannot run "
+                 "inside the scan)")
     server = RunaheadServer(
         cfg, params, n_slots=args.slots, context=context,
         spec_k=sc.spec_k, rounds=sc.rounds, backend=sc.backend, mesh=mesh,
-        draft_len=draft_len, page_size=args.page_size,
+        draft_len=draft_len, drafter=drafter, page_size=args.page_size,
         cache_pages=args.cache_pages, page_impl=args.page_impl,
+        step_horizon=step_horizon,
+        draft_len_auto=args.adaptive_draft and draft_len > 1,
     )
+    if step_horizon > 1:
+        log.info("fused decode horizons on: step_horizon=%d (one dispatch "
+                 "+ one host sync per %d decode iterations)",
+                 step_horizon, step_horizon)
     if draft_len > 1:
-        log.info("speculative decoding on: draft_len=%d (n-gram "
-                 "self-drafting)", draft_len)
+        log.info("speculative decoding on: draft_len=%d (%s)%s", draft_len,
+                 "repeat-last device drafting" if drafter is not None
+                 else "n-gram self-drafting",
+                 ", live-retuned from acceptance"
+                 if server.scheduler.draft_len_auto else "")
     if args.page_size:
         s = server.scheduler
         log.info("paged KV cache on: page_size=%d, pool of %d pages "
@@ -137,6 +188,17 @@ def _run_continuous(cfg, params, args, sc, mesh=None):
         len(done), n_tok, dt, server.scheduler.n_decode_steps,
         n_tok / dt, args.slots,
     )
+    s = server.scheduler
+    log.info("dispatch accounting: %d jitted dispatches, %d host syncs "
+             "for %d decode iterations (%.2f iterations/dispatch)",
+             s.n_dispatches, s.n_host_syncs, s.n_decode_steps,
+             s.n_decode_steps / max(1, s.n_dispatches))
+    if s.step_horizon > 1 and s.n_wasted_steps:
+        log.info("horizon waste: %d of %d fused iterations ran with every "
+                 "slot frozen", s.n_wasted_steps, s.n_decode_steps)
+    if s.draft_len_auto and s.n_draft_retunes:
+        log.info("adaptive draft_len: %d live retunes, final L=%d",
+                 s.n_draft_retunes, s.draft_len)
     log.info("latency p50=%.0fms p99=%.0fms max=%.0fms; "
              "max queue wait %d steps",
              1e3 * float(np.quantile(lat, 0.5)),
@@ -197,6 +259,14 @@ def main(argv=None):
     ap.add_argument("--draft-len", default="auto",
                     help="[continuous] tokens fed per verify step, or "
                          "'auto' for the tuner's speculation cost model")
+    ap.add_argument("--adaptive-draft", action="store_true",
+                    help="[continuous] re-decide draft_len at horizon "
+                         "boundaries from the LIVE acceptance counters "
+                         "(replaces the startup acceptance prior)")
+    ap.add_argument("--step-horizon", default="1",
+                    help="[continuous] decode steps fused into one "
+                         "compiled scan dispatch (K), or 'auto' for the "
+                         "tuner's amortization cost model")
     ap.add_argument("--page-size", type=int, default=None,
                     help="[continuous] KV-cache page size in rows; enables "
                          "the block/page-table cache with copy-on-write "

@@ -495,6 +495,40 @@ def init_paged_pool(
     return pool
 
 
+def mask_table_rows(table: jax.Array, active: jax.Array) -> jax.Array:
+    """Point inactive slots' page-table rows at the null page (id 0).
+
+    Per-step serving gets this for free: eviction zeroes the dead slot's
+    table row on the host, so the slot's dead per-step writes land in the
+    reserved null page instead of a recycled (possibly shared) page.  A
+    fused multi-step horizon (serving/scheduler.py) cannot update the host
+    table mid-scan, so each scan iteration re-derives the same invariant
+    from the live ``active`` mask — without it, a slot finishing at
+    iteration j < K keeps writing K/V through its stale chain, and a
+    wrapped ring position can corrupt a COW page another slot still reads.
+    """
+    return jnp.where(active[:, None], table, 0)
+
+
+def freeze_cache_lanes(new_cache, old_cache, active: jax.Array):
+    """Bit-freeze inactive batch lanes: keep ``old_cache`` where ``~active``.
+
+    The dense dual of ``mask_table_rows``: a dense ring cache has no null
+    page to absorb a dead lane's writes, so the serving step instead
+    selects the pre-step state back in for every inactive lane.  This is
+    what lets a fused horizon (serving/scheduler.py) leave a slot that
+    finished at iteration j < K bit-identical to the state per-step
+    serving would have evicted — including recurrent (SSM/xLSTM) state,
+    which would otherwise drift under dead steps.  Cache leaves are
+    layer-stacked with the batch on axis 1.
+    """
+    def sel(new, old):
+        mask = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+        return jnp.where(mask, new, old)
+
+    return jax.tree_util.tree_map(sel, new_cache, old_cache)
+
+
 def paged_prefill(
     cfg: ModelConfig,
     params: Params,

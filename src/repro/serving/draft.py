@@ -21,12 +21,43 @@ from typing import Protocol, Sequence
 
 
 class DraftSource(Protocol):
-    """Callable proposing ``n`` draft tokens after ``history``."""
+    """Callable proposing ``n`` draft tokens after ``history``.
+
+    A source may additionally declare ``device_capable = True``, meaning
+    its proposal is a pure function of the CURRENT token alone — the one
+    piece of per-slot state the fused-horizon scan carries on-device
+    (DESIGN.md §14).  Fused speculative serving (``step_horizon > 1`` with
+    ``draft_len > 1``) requires such a source: the scheduler re-derives
+    its drafts inside the scan, where no host callable can run.
+    """
 
     def __call__(self, history: Sequence[int], n: int) -> list[int]:
         """Return EXACTLY ``n`` proposed next tokens (pad however the
         source likes — wrong guesses only cost rejected verify rows)."""
         ...
+
+
+class RepeatLastDrafter:
+    """Propose the current token ``n`` times — NGramDrafter's fallback
+    promoted to the whole policy.
+
+    The weakest useful draft source, but the only history it needs is the
+    current token, so it is ``device_capable``: the fused-horizon scan
+    reproduces it on-device as ``broadcast_to(token[:, None], (B, L-1))``
+    with zero host involvement.  Per-step serving with this drafter is
+    the differential reference for fused speculative serving — same
+    drafts by construction, so sampled streams match bit-for-bit.
+    Repetitive workloads (degenerate loops, constant padding) still
+    accept constantly; free-form text mostly pays rejected verify rows.
+    """
+
+    device_capable = True
+
+    def __call__(self, history: Sequence[int], n: int) -> list[int]:
+        if n <= 0:
+            return []
+        last = history[-1] if len(history) else 0
+        return [int(last)] * n
 
 
 class NGramDrafter:
@@ -38,6 +69,8 @@ class NGramDrafter:
     repeat-last fallback so the proposal always has full length — the
     verify grid is fixed-shape and an unused row is just a rejected row.
     """
+
+    device_capable = False    # drafts read the whole host-side history
 
     def __init__(self, *, min_ngram: int = 1, max_ngram: int = 4):
         if not 1 <= min_ngram <= max_ngram:

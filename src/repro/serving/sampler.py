@@ -24,6 +24,15 @@ mesh-native for free (DESIGN.md §5.1): under the scheduler's active
 parameter columns — runs vocab-sharded and slot-data-parallel with no
 change here, and the per-row threefry streams (drawn OUTSIDE the solves)
 keep continuous serving bit-identical to the single-device path.
+
+The same statelessness is what lets the fused-horizon scheduler
+(DESIGN.md §14) call ``sample_slots`` / ``verify_slots`` INSIDE a
+``lax.scan`` body: every input — logits, per-iteration keys, the stacked
+slot parameters — is a traced value, every knob that shapes the compiled
+solve (spec_k, rounds, backend, the enable gates) is a scan-invariant
+static, and no call mutates anything.  One traced sampler body therefore
+serves per-step and K-fused serving identically, which is half of the
+fused == per-step bit-exactness contract.
 """
 from __future__ import annotations
 

@@ -48,8 +48,10 @@ from repro.models.decode import (
     decode_step_paged,
     decode_verify,
     decode_verify_paged,
+    freeze_cache_lanes,
     init_cache,
     init_paged_pool,
+    mask_table_rows,
     paged_prefill,
     paged_supported,
     prefill_into_slot,
@@ -211,6 +213,57 @@ def _admit_sample(logits, keys, slots, *, spec_k, rounds, backend, enable,
                         top_k_static=top_k_static, greedy_only=greedy_only)
 
 
+def _step_body(params, token, pos, keys, active, cache, slots, draft,
+               *, cfg, spec_k, rounds, backend, enable, top_k_static,
+               policy, draft_len, greedy_only):
+    """The traced body of ONE continuous-batching decode step (dense).
+
+    Shared verbatim by the per-step jit (``_scheduler_step``) and by every
+    iteration of the fused-horizon scan (``_scheduler_horizon``): a single
+    definition is what makes step_horizon a pure scheduling change —
+    K-fused serving runs bit-identical math to per-step serving because
+    there is literally one body to compile.
+    """
+    if draft_len == 1:
+        logits, stepped = decode_step(cfg, params, token, pos, cache)
+        # inactive lanes keep their pre-step cache state — the serial
+        # analogue of the verify branch's n_keep=0 rollback, and what
+        # keeps a slot that finishes mid-horizon bit-frozen
+        new_cache = freeze_cache_lanes(stepped, cache, active)
+        ks = jax.vmap(jax.random.split)(keys)               # (B, 2, 2)
+        new_keys = jnp.where(active[:, None], ks[:, 0], keys)
+        with solver.mesh_policy(policy):
+            nxt = sample_slots(logits, ks[:, 1], slots, spec_k=spec_k,
+                               rounds=rounds, backend=backend,
+                               enable=enable, top_k_static=top_k_static,
+                               greedy_only=greedy_only)
+        new_token = jnp.where(active, nxt, token)
+        new_pos = jnp.where(active, pos + 1, pos)
+        return (new_token, new_pos, new_keys, new_cache, nxt[:, None],
+                jnp.zeros_like(pos))
+
+    feed = jnp.concatenate([token[:, None], draft], axis=1)  # (B, L)
+    grid, wide_cache, stash = decode_verify(cfg, params, feed, pos, cache)
+    ks = jax.vmap(jax.random.split)(keys)                    # (B, 2, 2)
+    new_keys = jnp.where(active[:, None], ks[:, 0], keys)
+    with solver.mesh_policy(policy):
+        out, n_acc = verify_slots(grid, draft, ks[:, 1], slots,
+                                  spec_k=spec_k, rounds=rounds,
+                                  backend=backend, enable=enable,
+                                  top_k_static=top_k_static,
+                                  greedy_only=greedy_only)
+    n_acc = jnp.where(active, n_acc, 0)
+    # live slots commit 1 + accepted rows; inactive slots (n_keep 0) get
+    # every touched row restored — their state is bit-frozen, as in the
+    # serial branch
+    new_cache = rollback_cache_runs(wide_cache, stash, pos,
+                                    jnp.where(active, 1 + n_acc, 0))
+    bonus = jnp.take_along_axis(out, n_acc[:, None], axis=1)[:, 0]
+    new_token = jnp.where(active, bonus, token)
+    new_pos = jnp.where(active, pos + 1 + n_acc, pos)
+    return new_token, new_pos, new_keys, new_cache, out, n_acc
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "spec_k", "rounds", "backend", "enable",
@@ -253,65 +306,19 @@ def _scheduler_step(params, token, pos, keys, active, cache, slots, draft,
     Returns (token, pos, keys, cache, out (B, draft_len), n_acc (B,)):
     row b emitted ``out[b, :n_acc[b] + 1]``.
     """
-    if draft_len == 1:
-        logits, new_cache = decode_step(cfg, params, token, pos, cache)
-        ks = jax.vmap(jax.random.split)(keys)               # (B, 2, 2)
-        new_keys = jnp.where(active[:, None], ks[:, 0], keys)
-        with solver.mesh_policy(policy):
-            nxt = sample_slots(logits, ks[:, 1], slots, spec_k=spec_k,
-                               rounds=rounds, backend=backend,
-                               enable=enable, top_k_static=top_k_static,
-                               greedy_only=greedy_only)
-        new_token = jnp.where(active, nxt, token)
-        new_pos = jnp.where(active, pos + 1, pos)
-        return (new_token, new_pos, new_keys, new_cache, nxt[:, None],
-                jnp.zeros_like(pos))
-
-    feed = jnp.concatenate([token[:, None], draft], axis=1)  # (B, L)
-    grid, wide_cache, stash = decode_verify(cfg, params, feed, pos, cache)
-    ks = jax.vmap(jax.random.split)(keys)                    # (B, 2, 2)
-    new_keys = jnp.where(active[:, None], ks[:, 0], keys)
-    with solver.mesh_policy(policy):
-        out, n_acc = verify_slots(grid, draft, ks[:, 1], slots,
-                                  spec_k=spec_k, rounds=rounds,
-                                  backend=backend, enable=enable,
-                                  top_k_static=top_k_static,
-                                  greedy_only=greedy_only)
-    n_acc = jnp.where(active, n_acc, 0)
-    # live slots commit 1 + accepted rows; inactive slots (n_keep 0) get
-    # every touched row restored — their state is bit-frozen, as in the
-    # serial branch
-    new_cache = rollback_cache_runs(wide_cache, stash, pos,
-                                    jnp.where(active, 1 + n_acc, 0))
-    bonus = jnp.take_along_axis(out, n_acc[:, None], axis=1)[:, 0]
-    new_token = jnp.where(active, bonus, token)
-    new_pos = jnp.where(active, pos + 1 + n_acc, pos)
-    return new_token, new_pos, new_keys, new_cache, out, n_acc
+    return _step_body(params, token, pos, keys, active, cache, slots,
+                      draft, cfg=cfg, spec_k=spec_k, rounds=rounds,
+                      backend=backend, enable=enable,
+                      top_k_static=top_k_static, policy=policy,
+                      draft_len=draft_len, greedy_only=greedy_only)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("cfg", "context", "spec_k", "rounds", "backend",
-                     "enable", "top_k_static", "policy", "draft_len",
-                     "greedy_only", "page_impl"),
-    donate_argnames=("token", "pos", "keys", "pool"),
-)
-def _scheduler_step_paged(params, token, pos, keys, active, pool, table,
-                          slots, draft, *, cfg, context, spec_k, rounds,
-                          backend, enable, top_k_static, policy=None,
-                          draft_len=1, greedy_only=False,
-                          page_impl="gather"):
-    """``_scheduler_step`` over the page-table cache (DESIGN.md §13).
-
-    The dense slotted cache is replaced by (page pool, page table): the
-    forward goes through the paged duals (``decode_step_paged`` /
-    ``decode_verify_paged``) and speculative rollback through
-    ``rollback_paged_runs``; key chains, sampler solves, and the
-    active-slot masking are IDENTICAL to the dense step, which is what
-    keeps paged token streams bit-identical to dense ones.  The table is
-    read-only here (admission/eviction own it) and intentionally not
-    donated; inactive or evicted slots' table rows point at the null page,
-    so their dead per-step writes never touch a live request's pages.
+def _step_body_paged(params, token, pos, keys, active, pool, table, slots,
+                     draft, *, cfg, context, spec_k, rounds, backend,
+                     enable, top_k_static, policy, draft_len, greedy_only,
+                     page_impl):
+    """``_step_body`` over the page-table cache — the single traced step
+    shared by ``_scheduler_step_paged`` and ``_scheduler_horizon_paged``.
     """
     if draft_len == 1:
         logits, new_pool = decode_step_paged(
@@ -351,6 +358,161 @@ def _scheduler_step_paged(params, token, pos, keys, active, pool, table,
     return new_token, new_pos, new_keys, new_pool, out, n_acc
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "context", "spec_k", "rounds", "backend",
+                     "enable", "top_k_static", "policy", "draft_len",
+                     "greedy_only", "page_impl"),
+    donate_argnames=("token", "pos", "keys", "pool"),
+)
+def _scheduler_step_paged(params, token, pos, keys, active, pool, table,
+                          slots, draft, *, cfg, context, spec_k, rounds,
+                          backend, enable, top_k_static, policy=None,
+                          draft_len=1, greedy_only=False,
+                          page_impl="gather"):
+    """``_scheduler_step`` over the page-table cache (DESIGN.md §13).
+
+    The dense slotted cache is replaced by (page pool, page table): the
+    forward goes through the paged duals (``decode_step_paged`` /
+    ``decode_verify_paged``) and speculative rollback through
+    ``rollback_paged_runs``; key chains, sampler solves, and the
+    active-slot masking are IDENTICAL to the dense step, which is what
+    keeps paged token streams bit-identical to dense ones.  The table is
+    read-only here (admission/eviction own it) and intentionally not
+    donated; inactive or evicted slots' table rows point at the null page,
+    so their dead per-step writes never touch a live request's pages.
+    """
+    return _step_body_paged(params, token, pos, keys, active, pool, table,
+                            slots, draft, cfg=cfg, context=context,
+                            spec_k=spec_k, rounds=rounds, backend=backend,
+                            enable=enable, top_k_static=top_k_static,
+                            policy=policy, draft_len=draft_len,
+                            greedy_only=greedy_only, page_impl=page_impl)
+
+
+def _horizon_done(active, remaining, eos, out, n_acc):
+    """In-scan EOS/budget detection: the device dual of the host's
+    truncation rules in ``ContinuousScheduler._finish_run``.
+
+    A live slot emitted ``1 + n_acc`` tokens this iteration.  It is done
+    when that meets its remaining budget, or when an EOS lands anywhere in
+    the budget-truncated run — the same order the host applies (budget
+    first, then EOS within the surviving prefix), so device freeze and
+    host eviction always agree on the iteration a slot stops.  ``eos`` is
+    -1 for slots without a stop token (never matches a token id >= 0).
+
+    Returns (done (B,) bool, emitted (B,) int32).
+    """
+    emitted = jnp.where(active, 1 + n_acc, 0)
+    lim = jnp.minimum(emitted, remaining)
+    cols = jnp.arange(out.shape[1], dtype=jnp.int32)[None, :]
+    hit_eos = jnp.any((out == eos[:, None]) & (cols < lim[:, None]), axis=1)
+    done = active & ((emitted >= remaining) | hit_eos)
+    return done, emitted
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spec_k", "rounds", "backend", "enable",
+                     "top_k_static", "policy", "draft_len", "greedy_only",
+                     "horizon"),
+    donate_argnames=("token", "pos", "keys", "cache"),
+)
+def _scheduler_horizon(params, token, pos, keys, active, remaining, eos,
+                       cache, slots, *, cfg, spec_k, rounds, backend,
+                       enable, top_k_static, policy=None, draft_len=1,
+                       greedy_only=False, horizon=2):
+    """``horizon`` (= K) scheduler steps fused into ONE compiled scan.
+
+    The paper's dispatch-amortization move applied to serving (DESIGN.md
+    §14): instead of one jitted dispatch + one device→host sync per
+    decode step, the scan runs K iterations of the SAME traced step body
+    as ``_scheduler_step`` on-device, stacking each iteration's emissions
+    into (K, B, L) / (K, B) buffers the host replays once per horizon.
+
+    EOS/budget detection moves inside the scan (``_horizon_done``): a slot
+    finishing at iteration j < K drops out of ``active`` and its token /
+    pos / key / cache state is bit-frozen by the body's own masking for
+    the remaining K - j iterations — exactly the state per-step serving
+    would have left at eviction time.  Speculative horizons (draft_len >
+    1) draft on-device by repeating the carried token (the device dual of
+    ``RepeatLastDrafter``); host drafters cannot run mid-scan.
+
+    ``ys`` also records each iteration's ENTRY active mask so the host
+    replay can tell which rows of the emission buffer are real.
+    """
+    B = token.shape[0]
+
+    def body(carry, _):
+        token, pos, keys, cache, active, remaining = carry
+        if draft_len > 1:
+            draft = jnp.broadcast_to(token[:, None], (B, draft_len - 1))
+        else:
+            draft = jnp.zeros((B, 0), jnp.int32)
+        token, pos, keys, cache, out, n_acc = _step_body(
+            params, token, pos, keys, active, cache, slots, draft,
+            cfg=cfg, spec_k=spec_k, rounds=rounds, backend=backend,
+            enable=enable, top_k_static=top_k_static, policy=policy,
+            draft_len=draft_len, greedy_only=greedy_only)
+        done, emitted = _horizon_done(active, remaining, eos, out, n_acc)
+        new_carry = (token, pos, keys, cache, active & ~done,
+                     remaining - emitted)
+        return new_carry, (out, n_acc, active)
+
+    carry = (token, pos, keys, cache, active, remaining)
+    (token, pos, keys, cache, _, _), (outs, accs, acts) = jax.lax.scan(
+        body, carry, None, length=horizon)
+    return token, pos, keys, cache, outs, accs, acts
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "context", "spec_k", "rounds", "backend",
+                     "enable", "top_k_static", "policy", "draft_len",
+                     "greedy_only", "page_impl", "horizon"),
+    donate_argnames=("token", "pos", "keys", "pool"),
+)
+def _scheduler_horizon_paged(params, token, pos, keys, active, remaining,
+                             eos, pool, table, slots, *, cfg, context,
+                             spec_k, rounds, backend, enable, top_k_static,
+                             policy=None, draft_len=1, greedy_only=False,
+                             page_impl="gather", horizon=2):
+    """``_scheduler_horizon`` over the page-table cache.
+
+    One paged-specific move: each iteration masks the (read-only) page
+    table through ``mask_table_rows`` so slots that finished EARLIER IN
+    THIS SCAN write their dead K/V into the null page — re-deriving, from
+    the carried ``active`` mask, the exact table state per-step eviction
+    would have produced on the host.  Without it a frozen slot's stale
+    chain keeps absorbing writes, and a wrapped ring position could land
+    them in a COW page another slot still reads.
+    """
+    B = token.shape[0]
+
+    def body(carry, _):
+        token, pos, keys, pool, active, remaining = carry
+        table_eff = mask_table_rows(table, active)
+        if draft_len > 1:
+            draft = jnp.broadcast_to(token[:, None], (B, draft_len - 1))
+        else:
+            draft = jnp.zeros((B, 0), jnp.int32)
+        token, pos, keys, pool, out, n_acc = _step_body_paged(
+            params, token, pos, keys, active, pool, table_eff, slots,
+            draft, cfg=cfg, context=context, spec_k=spec_k, rounds=rounds,
+            backend=backend, enable=enable, top_k_static=top_k_static,
+            policy=policy, draft_len=draft_len, greedy_only=greedy_only,
+            page_impl=page_impl)
+        done, emitted = _horizon_done(active, remaining, eos, out, n_acc)
+        new_carry = (token, pos, keys, pool, active & ~done,
+                     remaining - emitted)
+        return new_carry, (out, n_acc, active)
+
+    carry = (token, pos, keys, pool, active, remaining)
+    (token, pos, keys, pool, _, _), (outs, accs, acts) = jax.lax.scan(
+        body, carry, None, length=horizon)
+    return token, pos, keys, pool, outs, accs, acts
+
+
 class ContinuousScheduler:
     """Slot-based continuous batcher over the runahead sampler.
 
@@ -385,6 +547,9 @@ class ContinuousScheduler:
         page_size: int | None = None,
         cache_pages: int | None = None,
         page_impl: str = "gather",
+        step_horizon: int = 1,
+        draft_len_auto: bool = False,
+        max_draft_len: int | None = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -395,20 +560,54 @@ class ContinuousScheduler:
         self.mesh = mesh
         if draft_len < 1:
             raise ValueError(f"draft_len must be >= 1, got {draft_len}")
-        if draft_len > 1 and not verify_supported(cfg):
+        if draft_len_auto and draft_len < 2:
+            raise ValueError(
+                "draft_len_auto needs an initial draft_len >= 2: L = 1 "
+                "never drafts, so the acceptance window that drives "
+                "decide_draft_len would stay empty forever"
+            )
+        if max_draft_len is None:
+            max_draft_len = max(draft_len, 8) if draft_len_auto else (
+                draft_len)
+        if max_draft_len < draft_len:
+            raise ValueError(
+                f"max_draft_len {max_draft_len} < draft_len {draft_len}"
+            )
+        if max_draft_len > 1 and not verify_supported(cfg):
             raise ValueError(
                 "speculative decoding (draft_len > 1) needs an all-dense "
                 "layer stack — this config has recurrent/MoE layers "
                 "(see models.decode.verify_supported)"
             )
-        if draft_len > context:
+        if max_draft_len > context:
             raise ValueError(
-                f"draft_len {draft_len} exceeds cache capacity {context}"
+                f"draft_len {max_draft_len} exceeds cache capacity "
+                f"{context}"
             )
         self.draft_len = draft_len
+        self.draft_len_auto = draft_len_auto
+        self.max_draft_len = max_draft_len
+        # acceptance window for live re-deciding of L (DESIGN.md §14): L
+        # is re-decided at each horizon boundary once the window holds at
+        # least this many drafted tokens
+        self.draft_retune_min = 64
+        self._retune_drafted_mark = 0
+        self._retune_accepted_mark = 0
         self.drafter: DraftSource = (
             drafter if drafter is not None else NGramDrafter()
         )
+        if step_horizon < 1:
+            raise ValueError(
+                f"step_horizon must be >= 1, got {step_horizon}")
+        self.step_horizon = step_horizon
+        if step_horizon > 1 and max_draft_len > 1 and not getattr(
+                self.drafter, "device_capable", False):
+            raise ValueError(
+                "fused horizons (step_horizon > 1) draft ON-DEVICE inside "
+                "the scan, so a speculative scheduler needs a "
+                "device-capable drafter (serving.draft.RepeatLastDrafter) "
+                "— host drafters cannot run mid-scan"
+            )
 
         self.paged = page_size is not None
         self.page_size = page_size
@@ -472,11 +671,15 @@ class ContinuousScheduler:
         self.slots: list[_SlotInfo | None] = [None] * n_slots
         self._finished: list[FinishedRequest] = []
         self._step_args = None     # (slots_arr, active, enable, k, greedy)
-        self.n_decode_steps = 0          # batched decode launches (stats)
+        self.n_decode_steps = 0          # batched decode iterations (stats)
         self.n_dispatches = 0            # jitted calls issued (stats)
         self.n_host_syncs = 0            # device->host reads (stats)
         self.n_drafted = 0               # drafted tokens offered to verify
         self.n_accepted = 0              # drafted tokens accepted
+        self.n_admissions = 0            # requests prefilled into a slot
+        self.n_horizons = 0              # fused scan launches (K > 1 only)
+        self.n_wasted_steps = 0          # all-idle scan iterations (K > 1)
+        self.n_draft_retunes = 0         # live decide_draft_len L switches
 
     @property
     def acceptance_rate(self) -> float:
@@ -515,8 +718,10 @@ class ContinuousScheduler:
                 "scheduler's (they are compiled into the shared step)"
             )
         if self.paged and prompt_len is not None:
+            # chains are provisioned for max_draft_len so a live retune
+            # of L never outgrows an in-flight request's pages
             plan = plan_chain(prompt_len, n_new, self.context,
-                              self.page_size, self.draft_len)
+                              self.page_size, self.max_draft_len)
             if plan.chain_len > self.alloc.n_pages - 1:
                 raise ValueError(
                     f"request needs {plan.chain_len} pages even with an "
@@ -555,7 +760,7 @@ class ContinuousScheduler:
                 raise ValueError("paged cache does not serve enc-dec archs")
             ptoks = [int(t) for t in np.asarray(prompt[0])]
             plan = plan_chain(prompt.shape[1], n_new, self.context,
-                              self.page_size, self.draft_len)
+                              self.page_size, self.max_draft_len)
             # longest registered prefix wins: each hit is one page of
             # prompt K/V admission never recomputes (COW fork)
             chain = []
@@ -611,6 +816,7 @@ class ContinuousScheduler:
         )[0])
         self.n_dispatches += 2           # prefill + first-token sample
         self.n_host_syncs += 1           # int(first)
+        self.n_admissions += 1
 
         self.token = self.token.at[i].set(first)
         self.pos = self.pos.at[i].set(prompt.shape[1])
@@ -636,7 +842,76 @@ class ContinuousScheduler:
 
     # -- the compiled decode step -------------------------------------------
 
+    def _ensure_step_args(self, live):
+        """(Re)build the occupancy-derived step arguments; cached until
+        admission/eviction changes which slots are live."""
+        if self._step_args is None:
+            idle = SamplerConfig(spec_k=self.spec_k, rounds=self.rounds,
+                                 backend=self.backend)
+            self._step_args = (
+                SlotSamplers.stack([s.sampler if s is not None else idle
+                                    for s in self.slots]),
+                jnp.asarray([s is not None for s in self.slots]),
+                _enable_bits(live),
+                _static_top_k(live),
+                all(c.greedy for c in live),
+            )
+        return self._step_args
+
+    def _finish_run(self, info: _SlotInfo, run: list[int]):
+        """Budget-then-EOS truncation of one slot's emitted run — the
+        host contract ``_horizon_done`` mirrors on-device.  Returns
+        (surviving run, done)."""
+        done = False
+        if len(run) >= info.remaining:       # budget truncation
+            run = run[: info.remaining]
+            done = True
+        if info.eos_id is not None and info.eos_id in run:
+            run = run[: run.index(info.eos_id) + 1]   # EOS truncation
+            done = True
+        return run, done
+
+    def _commit_run(self, i: int, info: _SlotInfo, run: list[int],
+                    done: bool, emitted: dict[Any, list[int]]) -> None:
+        """Book one slot's surviving run; evict on done."""
+        info.tokens.extend(run)
+        info.context.extend(run)
+        info.remaining -= len(run)
+        emitted.setdefault(info.rid, []).extend(run)
+        if done:
+            self._finished.append(FinishedRequest(info.rid, info.tokens))
+            self.slots[i] = None                     # evict: slot free
+            self._step_args = None
+            if self.paged:
+                # decref the chain (shared prefix pages stay live for
+                # their other holders) and point the slot's table row
+                # at the null page so its dead per-step writes can
+                # never land in a recycled page
+                self.alloc.release(self._chains[i])
+                self._chains[i] = None
+                self.table = self.table.at[i].set(0)
+
     def step(self) -> dict[Any, list[int]]:
+        """Advance serving by ONE host-visible boundary.
+
+        ``step_horizon == 1``: one decode step over every active slot —
+        one jitted dispatch, one device→host sync, exactly the historical
+        per-step scheduler.  ``step_horizon == K > 1``: one fused
+        ``lax.scan`` horizon of K decode iterations — still one dispatch
+        and one sync, with EOS/budget freezing handled on-device and the
+        K iterations replayed into host state here at the boundary
+        (DESIGN.md §14).  Either way the return value maps each live
+        request to every token it emitted this call.
+
+        Admission/eviction (and therefore the server's drain loop) only
+        ever run between calls — fusing K steps moves the host/device
+        boundary, never the scheduling semantics.
+        """
+        if self.step_horizon == 1:
+            return self._step_serial()
+        return self._step_fused()
+
+    def _step_serial(self) -> dict[Any, list[int]]:
         """One decode step over every active slot: {rid: tokens emitted}.
 
         Inactive slots ride along masked out — their token/pos/key stay
@@ -654,19 +929,8 @@ class ContinuousScheduler:
         if not live:
             return {}
         L = self.draft_len
-        if self._step_args is None:      # occupancy changed since last step
-            idle = SamplerConfig(spec_k=self.spec_k, rounds=self.rounds,
-                                 backend=self.backend)
-            self._step_args = (
-                SlotSamplers.stack([s.sampler if s is not None else idle
-                                    for s in self.slots]),
-                jnp.asarray([s is not None for s in self.slots]),
-                _enable_bits(live),
-                _static_top_k(live),
-                all(c.greedy for c in live),
-            )
         slots_arr, active, enable, top_k_static, greedy_only = (
-            self._step_args)
+            self._ensure_step_args(live))
 
         n_live = len(live)
         if L > 1:                        # host-side draft between steps
@@ -712,27 +976,134 @@ class ContinuousScheduler:
                 continue
             self.n_accepted += int(acc_host[i])
             run = [int(t) for t in out_host[i, : int(acc_host[i]) + 1]]
-            done = False
-            if len(run) >= info.remaining:       # budget truncation
-                run = run[: info.remaining]
-                done = True
-            if info.eos_id is not None and info.eos_id in run:
-                run = run[: run.index(info.eos_id) + 1]   # EOS truncation
-                done = True
-            info.tokens.extend(run)
-            info.context.extend(run)
-            info.remaining -= len(run)
-            emitted[info.rid] = run
-            if done:
-                self._finished.append(FinishedRequest(info.rid, info.tokens))
-                self.slots[i] = None                     # evict: slot free
-                self._step_args = None
-                if self.paged:
-                    # decref the chain (shared prefix pages stay live for
-                    # their other holders) and point the slot's table row
-                    # at the null page so its dead per-step writes can
-                    # never land in a recycled page
-                    self.alloc.release(self._chains[i])
-                    self._chains[i] = None
-                    self.table = self.table.at[i].set(0)
+            run, done = self._finish_run(info, run)
+            self._commit_run(i, info, run, done, emitted)
+        self._maybe_retune_draft_len()
         return emitted
+
+    def _step_fused(self) -> dict[Any, list[int]]:
+        """One fused horizon: K = ``step_horizon`` decode iterations in a
+        single compiled scan, then one host replay (DESIGN.md §14).
+
+        The replay walks the (K, B, L) emission buffer in iteration order
+        and pushes each live row through the SAME truncation/eviction
+        path as per-step serving; the device's entry-mask record (``acts``)
+        must agree with the host slot table at every iteration — a
+        divergence would mean the in-scan done logic and the host contract
+        drifted apart, so it raises instead of mis-attributing tokens.
+        """
+        live = [s.sampler for s in self.slots if s is not None]
+        if not live:
+            return {}
+        K = self.step_horizon
+        L = self.draft_len
+        slots_arr, active, enable, top_k_static, greedy_only = (
+            self._ensure_step_args(live))
+        remaining = jnp.asarray(
+            [s.remaining if s is not None else 0 for s in self.slots],
+            jnp.int32)
+        eos = jnp.asarray(
+            [-1 if s is None or s.eos_id is None else s.eos_id
+             for s in self.slots], jnp.int32)
+
+        if self.paged:
+            (self.token, self.pos, self.keys, self.pool, outs, accs,
+             acts) = _scheduler_horizon_paged(
+                self.params, self.token, self.pos, self.keys, active,
+                remaining, eos, self.pool, self.table, slots_arr,
+                cfg=self.cfg, context=self.context, spec_k=self.spec_k,
+                rounds=self.rounds, backend=self.backend, enable=enable,
+                top_k_static=top_k_static, policy=self._policy,
+                draft_len=L, greedy_only=greedy_only,
+                page_impl=self.page_impl, horizon=K,
+            )
+        else:
+            (self.token, self.pos, self.keys, self.cache, outs, accs,
+             acts) = _scheduler_horizon(
+                self.params, self.token, self.pos, self.keys, active,
+                remaining, eos, self.cache, slots_arr,
+                cfg=self.cfg, spec_k=self.spec_k, rounds=self.rounds,
+                backend=self.backend, enable=enable,
+                top_k_static=top_k_static, policy=self._policy,
+                draft_len=L, greedy_only=greedy_only, horizon=K,
+            )
+        self.n_decode_steps += K
+        self.n_dispatches += 1           # the whole horizon is one launch
+        self.n_host_syncs += 1           # ... and one boundary readback
+        self.n_horizons += 1
+
+        outs_host = np.asarray(outs)     # (K, B, L)
+        accs_host = np.asarray(accs)     # (K, B)
+        acts_host = np.asarray(acts)     # (K, B) entry mask per iteration
+        self.n_wasted_steps += int((~acts_host.any(axis=1)).sum())
+
+        emitted: dict[Any, list[int]] = {}
+        for j in range(K):
+            n_live_j = int(acts_host[j].sum())
+            self.n_drafted += (L - 1) * n_live_j
+            for i, info in enumerate(self.slots):
+                if bool(acts_host[j, i]) != (info is not None):
+                    raise RuntimeError(
+                        "fused horizon freeze mask diverged from the host "
+                        f"slot table at iteration {j}, slot {i} — device "
+                        "done-detection and host truncation disagree"
+                    )
+                if info is None:
+                    continue
+                self.n_accepted += int(accs_host[j, i])
+                run = [int(t)
+                       for t in outs_host[j, i, : int(accs_host[j, i]) + 1]]
+                run, done = self._finish_run(info, run)
+                self._commit_run(i, info, run, done, emitted)
+        self._maybe_retune_draft_len()
+        return emitted
+
+    # -- live re-tuning -----------------------------------------------------
+
+    def _maybe_retune_draft_len(self) -> None:
+        """Re-decide L from the LIVE acceptance window at a boundary.
+
+        The startup ``--draft-len auto`` guess prices speculation off an
+        assumed acceptance rate; once the verify counters have seen at
+        least ``draft_retune_min`` drafted tokens since the last decision,
+        the measured window rate replaces it (``tuning.decide_draft_len``).
+        L is a static of the compiled step, so a switch costs one retrace
+        per distinct L — bounded by ``max_draft_len``, and the floor of 2
+        keeps the probe wide enough that the window keeps filling.
+        """
+        if not self.draft_len_auto:
+            return
+        drafted = self.n_drafted - self._retune_drafted_mark
+        if drafted < self.draft_retune_min:
+            return
+        accepted = self.n_accepted - self._retune_accepted_mark
+        self._retune_drafted_mark = self.n_drafted
+        self._retune_accepted_mark = self.n_accepted
+        from repro.core.tuning import DISPATCH_OVERHEAD, decide_draft_len
+        new_len = max(2, decide_draft_len(
+            acceptance=accepted / drafted,
+            overhead=DISPATCH_OVERHEAD / self.step_horizon,
+            max_draft_len=self.max_draft_len,
+        ))
+        if new_len != self.draft_len:
+            self.draft_len = new_len
+            self.n_draft_retunes += 1
+
+    def suggested_step_horizon(self, *, max_horizon: int = 32) -> int:
+        """K the cost model would pick for the CURRENT live workload.
+
+        Prices ``tuning.decide_step_horizon`` off live counters: mean
+        remaining budget over occupied slots, converted from tokens to
+        device iterations through the measured acceptance rate (a
+        speculative step emits ~``1 + acceptance * (L - 1)`` tokens).
+        The horizon itself stays fixed per scheduler instance — switching
+        K retraces the scan — so callers read this between serves.
+        """
+        live = [s.remaining for s in self.slots if s is not None]
+        if not live:
+            return self.step_horizon
+        per_step = 1.0 + self.acceptance_rate * (self.draft_len - 1)
+        mean_steps = max(1.0, (sum(live) / len(live)) / per_step)
+        from repro.core.tuning import decide_step_horizon
+        return decide_step_horizon(mean_remaining=mean_steps,
+                                   max_horizon=max_horizon)

@@ -83,13 +83,17 @@ class RunaheadServer:
         page_size: int | None = None,
         cache_pages: int | None = None,
         page_impl: str = "gather",
+        step_horizon: int = 1,
+        draft_len_auto: bool = False,
+        max_draft_len: int | None = None,
     ):
         self.scheduler = ContinuousScheduler(
             cfg, params, n_slots=n_slots, context=context,
             spec_k=spec_k, rounds=rounds, backend=backend, mesh=mesh,
             draft_len=draft_len, drafter=drafter,
             page_size=page_size, cache_pages=cache_pages,
-            page_impl=page_impl,
+            page_impl=page_impl, step_horizon=step_horizon,
+            draft_len_auto=draft_len_auto, max_draft_len=max_draft_len,
         )
         self._pending: deque[Request] = deque()
         self._meta: dict[Any, tuple[int, int, float]] = {}   # rid -> meta
@@ -110,7 +114,15 @@ class RunaheadServer:
         self._meta[req.rid] = (self._step_idx, -1, time.time())
 
     def step(self) -> list[Completion]:
-        """Admit what fits, run one decode step, return new completions."""
+        """Admit what fits, advance one scheduler boundary, return new
+        completions.
+
+        With ``step_horizon`` K > 1 one call covers K fused decode
+        iterations (one dispatch): admission, eviction, and completion
+        drain all happen HERE, at the horizon boundary — requests
+        finishing mid-horizon surface at the end of the call, and queued
+        requests wait at most K iterations for a slot.
+        """
         self._admit_pending()
         self.scheduler.step()
         self._step_idx += 1

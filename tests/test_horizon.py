@@ -1,0 +1,318 @@
+"""Fused-horizon serving tests (DESIGN.md §14).
+
+The contract: a scheduler with ``step_horizon`` K > 1 runs K decode
+iterations per compiled dispatch and must emit per-request token streams
+BIT-IDENTICAL to the per-step scheduler (and hence to one-shot
+``generate``) — serial and speculative, dense and paged.  On top of the
+stream differential, this file pins the mechanics that make it true:
+
+  * mid-horizon termination — a slot hitting EOS or budget at iteration
+    j < K stays bit-frozen (token/pos/keys/cache) for the remaining
+    K - j iterations and is recycled correctly at the next boundary;
+  * counter accounting — a fused serve spends ``ceil(steps / K)``
+    decode dispatches plus two per admission, one host sync per horizon
+    plus one per admission;
+  * live draft-length retuning — ``draft_len_auto`` re-decides L from
+    the measured acceptance window at boundaries without perturbing
+    greedy streams.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.testing import reduced_config
+from repro.models.transformer import init_params
+from repro.serving.draft import NGramDrafter, RepeatLastDrafter
+from repro.serving.sampler import SamplerConfig
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.server import (
+    Request,
+    RunaheadServer,
+    generate_oneshot_reference,
+)
+
+CONTEXT = 32
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(
+        reduced_config("internlm2-1.8b"), n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_head=16, d_ff=64, vocab=128,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _workload(backend: str = "jnp") -> list[Request]:
+    """Staggered arrivals + heterogeneous samplers on 2 slots: queueing,
+    slot reuse, and mid-horizon finishes all occur."""
+    sc = lambda **kw: SamplerConfig(backend=backend, **kw)
+    return [
+        Request("a", [1, 2, 3, 4], 5, seed=11, sampler=sc(top_k=12)),
+        Request("b", [9, 8, 7, 6, 5], 3, seed=22, sampler=sc(top_p=0.9)),
+        Request("c", [4, 4, 4], 1, seed=33,
+                sampler=sc(target_entropy=2.0), arrival=1),
+        Request("d", [10, 20, 30, 40], 6, seed=44,
+                sampler=sc(temperature=0.7), arrival=2),
+        Request("e", [2, 4, 6, 8], 4, seed=55,
+                sampler=sc(top_k=8, top_p=0.95), arrival=4),
+    ]
+
+
+def _serve(cfg, params, reqs, **kw):
+    srv = RunaheadServer(cfg, params, **kw)
+    return {c.rid: c.tokens for c in srv.run(list(reqs))}, srv.scheduler
+
+
+def _spec_workload(backend: str = "jnp", *, greedy: bool = True):
+    """Repetitive prompts: repeat-last drafts actually get accepted, so
+    variable-length position jumps happen inside the fused scan."""
+    sc = SamplerConfig(backend=backend, greedy=greedy, top_k=12,
+                       temperature=0.9)
+    pats = [[3, 5, 7], [2, 4, 6], [9, 9, 1]]
+    return [Request(f"r{i}", (pats[i % 3] * 3)[:8], 7 + (i % 3), seed=i,
+                    sampler=sc, arrival=i // 3) for i in range(5)]
+
+
+class TestFusedMatchesPerStep:
+    @pytest.mark.parametrize("horizon", [2, 3, 8])
+    def test_serial_streams_identical(self, tiny, horizon):
+        """Serial decode, mixed samplers: fused == per-step == one-shot,
+        through queueing and slot recycling at horizon boundaries."""
+        cfg, params = tiny
+        reqs = _workload()
+        ref, _ = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT)
+        got, sched = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                            step_horizon=horizon)
+        assert got == ref
+        assert sched.n_horizons >= 1
+        for r in reqs:
+            assert got[r.rid] == generate_oneshot_reference(
+                cfg, params, r, context=CONTEXT)
+
+    def test_pallas_backend(self, tiny):
+        cfg, params = tiny
+        reqs = _workload("pallas")[:2]
+        ref, _ = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                        backend="pallas")
+        got, _ = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                        backend="pallas", step_horizon=2)
+        assert got == ref
+
+    def test_paged_fused_matches_dense(self, tiny):
+        cfg, params = tiny
+        reqs = _workload()
+        ref, _ = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT)
+        got, sched = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                            step_horizon=4, page_size=4)
+        assert got == ref
+        assert sched.alloc.n_used == 0        # every chain released
+
+    @pytest.mark.parametrize("page_size", [None, 4])
+    def test_greedy_speculative_matches_serial(self, tiny, page_size):
+        """Greedy spec == serial reference regardless of drafter, so the
+        fused speculative path checks against one-shot directly."""
+        cfg, params = tiny
+        reqs = _spec_workload()
+        refs = {r.rid: generate_oneshot_reference(cfg, params, r,
+                                                  context=CONTEXT)
+                for r in reqs}
+        got, sched = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                            step_horizon=4, draft_len=3,
+                            drafter=RepeatLastDrafter(),
+                            page_size=page_size)
+        assert got == refs
+        assert sched.n_accepted > 0           # drafts really accepted
+
+    def test_sampled_speculative_matches_per_step(self, tiny):
+        """Sampled spec streams are drafter-dependent, so the reference is
+        the PER-STEP scheduler with the host RepeatLastDrafter — same
+        drafts by construction, streams must match bit-for-bit."""
+        cfg, params = tiny
+        reqs = _spec_workload(greedy=False)
+        ref, _ = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                        draft_len=3, drafter=RepeatLastDrafter())
+        got, _ = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                        draft_len=3, drafter=RepeatLastDrafter(),
+                        step_horizon=4)
+        assert got == ref
+
+
+class TestMidHorizonTermination:
+    @pytest.mark.parametrize("page_size", [None, 4])
+    def test_state_frozen_after_budget_finish(self, tiny, page_size):
+        """One request, K far past its budget: the slot finishes at
+        iteration j < K and the remaining iterations must leave token /
+        pos / keys / cache EXACTLY as per-step eviction left them."""
+        cfg, params = tiny
+        req = Request("solo", [5, 6, 7], 4, seed=3,
+                      sampler=SamplerConfig(top_k=8))
+        kw = dict(n_slots=2, context=CONTEXT, page_size=page_size)
+        ref, s_ref = _serve(cfg, params, [req], **kw)
+        got, s_fused = _serve(cfg, params, [req], step_horizon=8, **kw)
+        assert got == ref
+        assert s_fused.n_horizons == 1        # 3 decode steps fit in K=8
+        np.testing.assert_array_equal(s_fused.token, s_ref.token)
+        np.testing.assert_array_equal(s_fused.pos, s_ref.pos)
+        np.testing.assert_array_equal(s_fused.keys, s_ref.keys)
+        if page_size is None:
+            for a, b in zip(jax.tree_util.tree_leaves(s_fused.cache),
+                            jax.tree_util.tree_leaves(s_ref.cache)):
+                np.testing.assert_array_equal(a, b)
+        else:
+            # frozen paged slots write through a null-masked table: every
+            # page EXCEPT the null page must match the per-step pool
+            for a, b in zip(jax.tree_util.tree_leaves(s_fused.pool),
+                            jax.tree_util.tree_leaves(s_ref.pool)):
+                np.testing.assert_array_equal(np.asarray(a)[:, 1:],
+                                              np.asarray(b)[:, 1:])
+
+    def test_eos_mid_horizon(self, tiny):
+        """EOS fires inside the scan: the stream truncates exactly where
+        the per-step host truncation would, and a co-resident request
+        keeps decoding unperturbed."""
+        cfg, params = tiny
+        sc = SamplerConfig(greedy=True)
+        probe = Request("p", [5, 6, 7], 12, seed=3, sampler=sc)
+        full = generate_oneshot_reference(cfg, params, probe, context=CONTEXT)
+        eos = full[5]
+        stop_at = full.index(eos)             # first occurrence may be < 5
+        mate = Request("m", [8, 9, 10, 11], 12, seed=4, sampler=sc)
+        reqs = [dataclasses.replace(probe, eos_id=eos), mate]
+        ref, _ = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT)
+        got, _ = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                        step_horizon=8)
+        assert got == ref
+        assert got["p"] == full[:stop_at + 1]
+        assert got["m"] == generate_oneshot_reference(
+            cfg, params, mate, context=CONTEXT)
+
+    @pytest.mark.parametrize("page_size", [None, 4])
+    def test_slot_recycled_at_next_boundary(self, tiny, page_size):
+        """A slot freed mid-horizon admits a queued request at the next
+        boundary and that request's stream is still the one-shot one —
+        the frozen interlude left nothing behind in the recycled slot."""
+        cfg, params = tiny
+        sc = lambda **kw: SamplerConfig(**kw)
+        reqs = [
+            Request("short", [1, 2, 3], 2, seed=7, sampler=sc(top_k=8)),
+            Request("long", [4, 5, 6, 7], 9, seed=8, sampler=sc()),
+            Request("late", [7, 7, 2], 6, seed=9,
+                    sampler=sc(temperature=0.8)),
+        ]
+        got, sched = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                            step_horizon=4, page_size=page_size)
+        for r in reqs:
+            assert got[r.rid] == generate_oneshot_reference(
+                cfg, params, r, context=CONTEXT), r.rid
+        assert sched.n_admissions == 3
+
+
+class TestCounterAccounting:
+    def test_fused_dispatch_counts(self, tiny):
+        """All slots admitted up front, no queue: the serve spends exactly
+        ceil(steps / K) decode dispatches (+2 per admission), one host
+        sync per horizon (+1 per admission)."""
+        cfg, params = tiny
+        sc = SamplerConfig(top_k=8)
+        reqs = [Request("a", [1, 2, 3], 5, seed=1, sampler=sc),
+                Request("b", [4, 5, 6], 9, seed=2, sampler=sc)]
+        K = 4
+        ref, s1 = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT)
+        got, sK = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                         step_horizon=K)
+        assert got == ref
+        per_step = s1.n_decode_steps          # 8: the longest tail
+        horizons = -(-per_step // K)
+        assert sK.n_horizons == horizons
+        assert sK.n_decode_steps == K * horizons
+        assert sK.n_admissions == 2
+        assert sK.n_dispatches == horizons + 2 * sK.n_admissions
+        assert sK.n_host_syncs == horizons + sK.n_admissions
+        # per-step spends one dispatch+sync per decode step instead
+        assert s1.n_dispatches == per_step + 2 * s1.n_admissions
+        assert s1.n_host_syncs == per_step + s1.n_admissions
+
+    def test_wasted_iterations_counted(self, tiny):
+        """A lone 4-token request inside a K=8 horizon: iterations after
+        its finish run with every slot frozen and are counted."""
+        cfg, params = tiny
+        req = Request("w", [5, 6, 7], 4, seed=3, sampler=SamplerConfig())
+        _, sched = _serve(cfg, params, [req], n_slots=2, context=CONTEXT,
+                          step_horizon=8)
+        assert sched.n_horizons == 1
+        assert sched.n_wasted_steps == 8 - 3  # 3 live iterations
+        assert sched.n_decode_steps == 8
+
+    def test_suggested_step_horizon_reads_live_counters(self, tiny):
+        cfg, params = tiny
+        sched = ContinuousScheduler(cfg, params, n_slots=2, context=CONTEXT,
+                                    step_horizon=2)
+        assert sched.suggested_step_horizon() == 2   # empty: keep K
+        sched.admit("x", [1, 2, 3], 24, 0, SamplerConfig())
+        k = sched.suggested_step_horizon()
+        assert k > 1                                  # budget to amortize
+        sched2 = ContinuousScheduler(cfg, params, n_slots=2,
+                                     context=CONTEXT)
+        sched2.admit("y", [1, 2, 3], 2, 0, SamplerConfig())
+        assert sched2.suggested_step_horizon() <= k   # tiny tail, small K
+
+
+class TestAdaptiveDraftLen:
+    def test_retunes_from_measured_acceptance(self, tiny):
+        """Sampled workload where repeat-last drafts are nearly all
+        rejected: once the window fills, decide_draft_len contracts L to
+        the floor of 2 and the retune is counted."""
+        cfg, params = tiny
+        reqs = _spec_workload(greedy=False)
+        _, sched = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                          draft_len=4, drafter=RepeatLastDrafter(),
+                          draft_len_auto=True, step_horizon=2)
+        assert sched.n_draft_retunes >= 1
+        assert sched.draft_len == 2
+        assert sched.max_draft_len == 8       # auto default headroom
+
+    def test_greedy_streams_survive_retune(self, tiny):
+        """L switches mid-serve must not perturb greedy streams (greedy
+        spec == serial for ANY L sequence)."""
+        cfg, params = tiny
+        reqs = _spec_workload()
+        refs = {r.rid: generate_oneshot_reference(cfg, params, r,
+                                                  context=CONTEXT)
+                for r in reqs}
+        got, sched = _serve(cfg, params, reqs, n_slots=2, context=CONTEXT,
+                            draft_len=3, drafter=RepeatLastDrafter(),
+                            draft_len_auto=True, step_horizon=2)
+        assert got == refs
+
+    def test_validation(self, tiny):
+        cfg, params = tiny
+        with pytest.raises(ValueError, match="draft_len_auto"):
+            ContinuousScheduler(cfg, params, n_slots=2, context=CONTEXT,
+                                draft_len=1, draft_len_auto=True)
+        with pytest.raises(ValueError, match="max_draft_len"):
+            ContinuousScheduler(cfg, params, n_slots=2, context=CONTEXT,
+                                draft_len=4, max_draft_len=2)
+        with pytest.raises(ValueError, match="step_horizon"):
+            ContinuousScheduler(cfg, params, n_slots=2, context=CONTEXT,
+                                step_horizon=0)
+        with pytest.raises(ValueError, match="device-capable"):
+            ContinuousScheduler(cfg, params, n_slots=2, context=CONTEXT,
+                                step_horizon=2, draft_len=3,
+                                drafter=NGramDrafter())
+
+
+class TestRepeatLastDrafter:
+    def test_repeats_current_token(self):
+        d = RepeatLastDrafter()
+        assert d([5, 9, 42], 3) == [42, 42, 42]
+        assert d([], 2) == [0, 0]
+        assert d([7], 0) == []
+
+    def test_device_capability_flags(self):
+        assert RepeatLastDrafter.device_capable
+        assert not NGramDrafter.device_capable

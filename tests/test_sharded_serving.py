@@ -253,6 +253,78 @@ PAGED_SCRIPT = textwrap.dedent("""
 """)
 
 
+FUSED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_mesh_compat
+    from repro.models.testing import reduced_config
+    from repro.models.transformer import init_params
+    from repro.serving.draft import RepeatLastDrafter
+    from repro.serving.sampler import SamplerConfig
+    from repro.serving.server import Request, RunaheadServer
+
+    backend = "@BACKEND@"
+    cfg = dataclasses.replace(
+        reduced_config("internlm2-1.8b"), n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_head=16, d_ff=64, vocab=128,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
+
+    def workload():
+        sc = lambda **kw: SamplerConfig(backend=backend, **kw)
+        return [
+            Request("a", [1, 2, 3, 4], 5, seed=11, sampler=sc(top_k=12)),
+            Request("b", [9, 8, 7, 6, 5], 3, seed=22, sampler=sc(top_p=0.9)),
+            Request("c", [4, 4, 4], 4, seed=33,
+                    sampler=sc(target_entropy=2.0), arrival=1),
+            Request("d", [10, 20, 30, 40], 6, seed=44,
+                    sampler=sc(temperature=0.7), arrival=2),
+            Request("e", [2, 4, 6, 8], 4, seed=55,
+                    sampler=sc(top_k=8, top_p=0.95), arrival=4),
+        ]
+
+    # per-step single-device server is the reference; the fused horizon
+    # must reproduce it on 1 device AND under the (2, 4) mesh, dense and
+    # paged — the scan body shards exactly like the per-step body
+    plain = RunaheadServer(cfg, params, n_slots=4, context=32,
+                           backend=backend)
+    ref = {c.rid: c.tokens for c in plain.run(workload())}
+    for m in (None, mesh):
+        for page in (None, 4):
+            srv = RunaheadServer(cfg, params, n_slots=4, context=32,
+                                 backend=backend, mesh=m, page_size=page,
+                                 step_horizon=4)
+            got = {c.rid: c.tokens for c in srv.run(workload())}
+            label = ("meshed" if m is not None else "single",
+                     "paged" if page else "dense")
+            assert got == ref, (backend, label, got, ref)
+            assert srv.scheduler.n_horizons >= 1, label
+            print(backend, label, "fused streams identical")
+
+    # fused speculative under the mesh: repeat-last drafting on-device,
+    # greedy repetitive workload == the serial reference
+    sc = SamplerConfig(backend=backend, greedy=True, top_k=12)
+    pats = [[3, 5, 7], [2, 4, 6], [9, 9, 1]]
+    reqs = [Request(f"r{i}", (pats[i % 3] * 3)[:8], 7 + (i % 3), seed=i,
+                    sampler=sc, arrival=i // 3) for i in range(5)]
+    sref = {c.rid: c.tokens
+            for c in RunaheadServer(cfg, params, n_slots=2, context=32,
+                                    backend=backend).run(list(reqs))}
+    srv = RunaheadServer(cfg, params, n_slots=2, context=32,
+                         backend=backend, mesh=mesh, draft_len=3,
+                         drafter=RepeatLastDrafter(), step_horizon=3)
+    sgot = {c.rid: c.tokens for c in srv.run(list(reqs))}
+    assert sgot == sref, (backend, sgot, sref)
+    assert srv.scheduler.n_accepted > 0
+    print(backend, "fused speculative meshed streams identical")
+    print("OK")
+""")
+
+
 def _run(script):
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     return subprocess.run([sys.executable, "-c", script],
@@ -283,6 +355,17 @@ def test_sharded_paged_streams_identical(backend):
     (2, 4) mesh, serial and speculative), with prefix COW forks taken
     and the page pool genuinely sharded over the data axis."""
     r = _run(PAGED_SCRIPT.replace("@BACKEND@", backend))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp"])
+def test_sharded_fused_horizon_streams_identical(backend):
+    """Fused K=4 horizons on 8 devices: per-step single-device streams
+    reproduced bit-for-bit (dense/paged × single/meshed), plus fused
+    on-device speculative drafting under the mesh."""
+    r = _run(FUSED_SCRIPT.replace("@BACKEND@", backend))
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout
 

@@ -297,3 +297,77 @@ def test_decide_draft_len_respects_cap_and_validates():
         tuning.decide_draft_len(acceptance=1.5)
     with pytest.raises(ValueError):
         tuning.decide_draft_len(acceptance=0.5, max_draft_len=0)
+
+
+# ---------------------------------------------------------------------------
+# fused serving horizon (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def test_decision_step_horizon_roundtrips_and_defaults():
+    d = tuning.Decision(spec_k=4, rounds=8, placement="single",
+                        backend="jnp", step_horizon=6)
+    assert tuning.Decision.from_json(d.to_json()) == d
+    # pre-§14 cache entries carry no step_horizon: default to per-step
+    legacy = dict(d.to_json())
+    legacy.pop("step_horizon")
+    assert tuning.Decision.from_json(legacy).step_horizon == 1
+
+
+def test_config_key_carries_step_horizon():
+    assert "hz=0" in _key().cache_key()
+    assert "hz=8" in _key(step_horizon=8).cache_key()
+    assert _key().cache_key() != _key(step_horizon=8).cache_key()
+
+
+def test_cached_insane_budget_knobs_not_replayed(tmp_path):
+    """A corrupted cache entry (step_horizon 0) must fall through to the
+    analytic model instead of steering the solver."""
+    path = str(tmp_path / "cache.json")
+    fixed = tuning.Decision(spec_k=4, rounds=6, placement="vocab",
+                            backend="jnp", source="fixed")
+    t1 = tuning.Tuner(path)
+    with tuning.autotune():
+        t1.decide(_key(), options=OPTIONS, backends=("jnp",), fixed=fixed,
+                  measure=_measure_fastest(4, "vocab"))
+    import json
+    with open(path) as f:
+        data = json.load(f)
+    entry = next(iter(data["entries"].values()))
+    entry["decision"]["step_horizon"] = 0
+    with open(path, "w") as f:
+        json.dump(data, f)
+    t2 = tuning.Tuner(path)
+    d = t2.decide(_key(), options=OPTIONS, backends=("jnp",), fixed=fixed)
+    assert d.source == "model"
+
+
+def test_decide_step_horizon_nothing_to_amortize_is_per_step():
+    assert tuning.decide_step_horizon(mean_remaining=32.0,
+                                      overhead=0.0) == 1
+
+
+def test_decide_step_horizon_idle_slots_make_fusion_free():
+    assert tuning.decide_step_horizon(mean_remaining=4.0, load=0.0,
+                                      max_horizon=16) == 16
+
+
+def test_decide_step_horizon_grows_with_budget_and_overhead():
+    ks = [tuning.decide_step_horizon(mean_remaining=m)
+          for m in (1.0, 8.0, 32.0, 128.0)]
+    assert ks == sorted(ks), ks
+    assert ks[-1] > ks[0] > 0
+    cheap = tuning.decide_step_horizon(mean_remaining=32.0, overhead=1.0)
+    costly = tuning.decide_step_horizon(mean_remaining=32.0, overhead=20.0)
+    assert costly >= cheap > 1
+
+
+def test_decide_step_horizon_respects_cap_and_validates():
+    assert tuning.decide_step_horizon(mean_remaining=1000.0,
+                                      max_horizon=8) <= 8
+    with pytest.raises(ValueError):
+        tuning.decide_step_horizon(mean_remaining=0.5)
+    with pytest.raises(ValueError):
+        tuning.decide_step_horizon(mean_remaining=8.0, max_horizon=0)
+    with pytest.raises(ValueError):
+        tuning.decide_step_horizon(mean_remaining=8.0, load=1.5)
