@@ -33,10 +33,12 @@ def env_info() -> dict:
     than compiled on a TPU slice)."""
     dev = jax.devices()[0]
     try:
-        from repro.kernels.ops import _interpret
-        interpret = bool(_interpret())
+        from repro.kernels.ops import interpret_mode, interpret_mode_source
+        interpret = bool(interpret_mode())
+        interpret_source = interpret_mode_source()
     except Exception:                                  # pragma: no cover
         interpret = None
+        interpret_source = None
     return {
         "device_kind": dev.platform,
         "device_model": str(getattr(dev, "device_kind", "") or ""),
@@ -44,4 +46,6 @@ def env_info() -> dict:
         "device_count": jax.device_count(),
         "jax_version": jax.__version__,
         "pallas_interpret": interpret,
+        # "env" when REPRO_PALLAS_INTERPRET forced the mode, else "auto"
+        "pallas_interpret_source": interpret_source,
     }

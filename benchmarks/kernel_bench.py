@@ -1,0 +1,178 @@
+"""Kernel block-geometry benchmark: fixed vs tuned launches (DESIGN.md §15).
+
+For every parameterized Pallas kernel — the three solver sweeps, the
+fused top-k, flash attention, and paged attention — measure the legacy
+hard-coded geometry against the tuner's KernelDecision at a couple of
+representative shapes.  The tuned column is the analytic tier by default
+(what a cold process gets); run under ``REPRO_AUTOTUNE=1`` to price the
+measured tier instead (winners then persist to REPRO_TUNING_CACHE).
+
+Emits ``BENCH_kernels.json`` via the run.py artifact hook: one record
+per kernel × shape with both geometries, both latencies, the speedup,
+and the decision source — the before/after evidence for the kernel
+tier, stamped (run.py adds env_info) with the device kind and interpret
+mode that make a CPU-interpret number legible next to a TPU one.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from benchmarks.common import row
+
+_PAYLOAD: dict | None = None
+
+
+def timed_pair(fn_a, fn_b, args, reps: int = 7) -> tuple[float, float]:
+    """Median seconds for two callables, INTERLEAVED rep by rep.
+
+    Same-geometry launches measured seconds apart on this box differ by
+    up to ~1.5x (scheduler drift); alternating a/b inside one loop makes
+    the pair share each drift window, so their RATIO is trustworthy even
+    when the absolute numbers wander.
+    """
+    import time
+
+    import jax
+
+    jax.block_until_ready(fn_a(*args))       # compile + warm both
+    jax.block_until_ready(fn_b(*args))
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        tb.append(time.perf_counter() - t0)
+    ta.sort()
+    tb.sort()
+    return ta[len(ta) // 2], tb[len(tb) // 2]
+
+# (B, V, M) sweeps for the solver kernels; M=15 = spec_k 4's candidate grid
+SOLVER_SHAPES = ((8, 8192, 15), (2, 32768, 15))
+
+
+def _solver_cases(jnp, ops_mod, tuning, rng):
+    from repro.kernels import multi_count as mc
+    from repro.kernels import multi_entropy as me
+    from repro.kernels import multi_mass as mm
+
+    for B, V, M in SOLVER_SHAPES:
+        x = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32) * 2.0)
+        taus = jnp.asarray(rng.normal(size=(B, M)).astype(np.float32))
+        probs = jnp.asarray(np.asarray(jnp.exp(x))
+                            / np.asarray(jnp.exp(x)).sum(-1, keepdims=True))
+        ts = jnp.asarray(
+            np.linspace(0.3, 2.0, M, dtype=np.float32)[None].repeat(B, 0))
+        for kernel, fn, args in (
+            ("multi_count", mc.multi_count, (x, taus)),
+            ("multi_mass", mm.multi_mass, (probs, jnp.abs(taus) * 1e-3)),
+            ("multi_entropy", me.multi_entropy, (x, ts)),
+        ):
+            yield (kernel, (B, V, M), fn, args,
+                   {"block_v": 2048})
+
+
+def _all_cases(jnp, ops_mod, tuning, rng):
+    """(kernel, key_shape, raw_fn, args, fixed_params) per bench case.
+
+    raw_fn takes the block params as keyword args (adapters below wrap
+    the two positional-signature kernels)."""
+    yield from _solver_cases(jnp, ops_mod, tuning, rng)
+
+    from repro.kernels import blocks
+    from repro.kernels import flash_fwd as ff
+    from repro.kernels import paged_attend as pa
+    from repro.kernels import runahead_threshold as rt
+
+    # fused top-k: (B, V)
+    B, V = 4, 8192
+    x = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32))
+    topk = functools.partial(rt.runahead_topk_threshold, k_target=50,
+                             rounds=6, spec_k=4)
+    yield ("runahead_topk", (B, V), topk, (x,), {"block_v": blocks.LANE})
+
+    # flash attention: (B, S, H, D)
+    B, S, H, D = 1, 256, 2, 32
+    q, k, v = (jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+               for _ in range(3))
+
+    def flash(q_, k_, v_, *, q_chunk, kv_chunk, interpret):
+        return ff.flash_fwd(q_, k_, v_, q_chunk, kv_chunk, 0, interpret)
+
+    yield ("flash_fwd", (B, S, H, D), flash, (q, k, v),
+           {"q_chunk": blocks.divisor_chunk(S, 512),
+            "kv_chunk": blocks.divisor_chunk(S, 1024)})
+
+    # paged attention: (B, nkv, n_chain, P, L, R, D)
+    B, P, nkv, D, L, R, chain = 4, 8, 2, 16, 2, 2, 8
+    n_pages = B * chain + 1
+    pool_k = jnp.asarray(
+        rng.normal(size=(n_pages, P, nkv, D)).astype(np.float32))
+    pool_v = jnp.asarray(
+        rng.normal(size=(n_pages, P, nkv, D)).astype(np.float32))
+    table = jnp.asarray(rng.permutation(n_pages - 1)[: B * chain]
+                        .reshape(B, chain).astype(np.int32))
+    ctx = chain * P
+    pos = jnp.full((B,), ctx - L, jnp.int32)
+    qd = jnp.asarray(
+        rng.normal(size=(B, L, nkv * R, D)).astype(np.float32))
+    paged = functools.partial(pa.paged_attend, context=ctx)
+    yield ("paged_attend", (B, nkv, chain, P, L, R, D), paged,
+           (pool_k, pool_v, table, pos, qd), {"pages_per_step": 1})
+
+
+def run():
+    global _PAYLOAD
+    import jax.numpy as jnp
+
+    from repro.core import tuning
+    from repro.kernels import ops as ops_mod
+
+    rng = np.random.default_rng(0)
+    interp = ops_mod.interpret_mode()
+    records = []
+
+    for kernel, shape, fn, args, fixed in _all_cases(jnp, ops_mod, tuning,
+                                                     rng):
+        key = tuning.KernelKey(
+            kernel=kernel, shape=tuple(int(s) for s in shape),
+            dtype="float32", device_kind=tuning.device_platform()[0],
+            interpret=interp)
+        decision = tuning.decide_kernel(
+            key, fixed=fixed,
+            measure=lambda c, k=kernel: ops_mod._measure_kernel(k, key, c))
+        tuned = decision.params
+
+        fixed_s, tuned_s = timed_pair(
+            functools.partial(fn, **fixed, interpret=interp),
+            functools.partial(fn, **tuned, interpret=interp),
+            args)
+        label = "x".join(str(s) for s in shape)
+        rec = {
+            "kernel": kernel,
+            "shape": list(shape),
+            "dtype": "float32",
+            "fixed_params": dict(fixed),
+            "tuned_params": dict(tuned),
+            "fixed_us": round(fixed_s * 1e6, 1),
+            "tuned_us": round(tuned_s * 1e6, 1),
+            "speedup": round(fixed_s / max(tuned_s, 1e-12), 3),
+            "source": decision.source,
+        }
+        records.append(rec)
+        yield row(f"kernel/{kernel}/{label}/fixed", fixed_s * 1e6,
+                  ";".join(f"{k}={v}" for k, v in sorted(fixed.items())))
+        yield row(f"kernel/{kernel}/{label}/tuned", tuned_s * 1e6,
+                  ";".join(f"{k}={v}" for k, v in sorted(tuned.items()))
+                  + f";{decision.source}")
+
+    _PAYLOAD = {"records": records}
+
+
+def json_payload():
+    if _PAYLOAD is None:
+        return None
+    return "BENCH_kernels.json", _PAYLOAD

@@ -1,0 +1,143 @@
+"""The kernel tier's no-regression contract, as an executable assertion (CI).
+
+For every parameterized Pallas kernel (the kernel_bench case table), the
+tuner's KernelDecision must be
+
+  * CORRECT — the tuned geometry's output equals the fixed geometry's:
+    bit-exact for the order-invariant kernels (multi_count's integer
+    sums, runahead_topk's lane-masked walk, paged_attend's
+    underflow-masked unroll), tight-allclose for the float-regrouping
+    ones (multi_mass / multi_entropy partial sums, flash's online
+    softmax);
+  * NO SLOWER — tuned latency <= ``--tolerance`` (default 1.05) x fixed
+    latency, measured INTERLEAVED (kernel_bench.timed_pair) because
+    same-geometry launches drift ~1.5x across measurement windows on a
+    loaded CPU box.  When the decision IS the fixed geometry the
+    latency leg is skipped (identical launch, ratio 1 by construction).
+
+  PYTHONPATH=src python -m benchmarks.kernel_guard --tolerance 1.05
+
+Exit code 0 iff every case holds.  Writes ``kernel_guard.json`` (CWD,
+git-ignored) for CI to upload; the kernel decisions land in
+REPRO_TUNING_CACHE (default CWD ``tuning_cache.json`` here) alongside
+the solver entries.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+# allclose tolerance per float-regrouping kernel; unlisted kernels must
+# be bit-exact across geometries
+_RTOL = {"multi_mass": 1e-5, "multi_entropy": 1e-4, "flash_fwd": 1e-5}
+
+
+def _to_tuple(out):
+    return out if isinstance(out, tuple) else (out,)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float, default=1.05,
+                    help="tuned latency must be <= tolerance * fixed")
+    ap.add_argument("--autotune", action="store_true",
+                    help="exercise the measured tier (REPRO_AUTOTUNE "
+                         "equivalent) instead of the analytic default")
+    args = ap.parse_args(argv)
+
+    os.environ.setdefault("REPRO_TUNING_CACHE",
+                          os.path.join(os.getcwd(), "tuning_cache.json"))
+
+    import contextlib
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import env_info
+    from benchmarks.kernel_bench import _all_cases, timed_pair
+    from repro.core import tuning
+    from repro.kernels import ops as ops_mod
+
+    rng = np.random.default_rng(0)
+    interp = ops_mod.interpret_mode()
+    results, ok_all = [], True
+
+    ctx = tuning.autotune() if args.autotune else contextlib.nullcontext()
+    with ctx:
+        for kernel, shape, fn, call_args, fixed in _all_cases(
+                jnp, ops_mod, tuning, rng):
+            key = tuning.KernelKey(
+                kernel=kernel, shape=tuple(int(s) for s in shape),
+                dtype="float32", device_kind=tuning.device_platform()[0],
+                interpret=interp)
+            decision = tuning.decide_kernel(
+                key, fixed=fixed,
+                measure=lambda c, k=kernel, kk=key:
+                    ops_mod._measure_kernel(k, kk, c))
+            tuned = decision.params
+
+            f_fixed = functools.partial(fn, **fixed, interpret=interp)
+            f_tuned = functools.partial(fn, **tuned, interpret=interp)
+
+            out_f = _to_tuple(f_fixed(*call_args))
+            out_t = _to_tuple(f_tuned(*call_args))
+            rtol = _RTOL.get(kernel)
+            if rtol is None:
+                correct = all(
+                    bool(jnp.array_equal(a, b))
+                    for a, b in zip(out_f, out_t))
+                check = "bit_exact"
+            else:
+                correct = all(
+                    bool(jnp.allclose(a, b, rtol=rtol, atol=0.0))
+                    for a, b in zip(out_f, out_t))
+                check = f"allclose rtol={rtol}"
+
+            if tuned == fixed:
+                fixed_s = tuned_s = None
+                ratio = 1.0
+            else:
+                fixed_s, tuned_s = timed_pair(f_fixed, f_tuned, call_args)
+                ratio = tuned_s / max(fixed_s, 1e-12)
+
+            case_ok = correct and ratio <= args.tolerance
+            ok_all &= case_ok
+            results.append({
+                "kernel": kernel,
+                "shape": list(shape),
+                "fixed_params": dict(fixed),
+                "tuned_params": dict(tuned),
+                "source": decision.source,
+                "check": check,
+                "correct": correct,
+                "fixed_us": (None if fixed_s is None
+                             else round(fixed_s * 1e6, 1)),
+                "tuned_us": (None if tuned_s is None
+                             else round(tuned_s * 1e6, 1)),
+                "ratio": round(ratio, 3),
+                "ok": case_ok,
+            })
+            tag = "OK " if case_ok else "FAIL"
+            print(f"kernel_guard: {tag} {kernel} {shape} "
+                  f"tuned={decision.label()} [{decision.source}] "
+                  f"{check}={correct} ratio={ratio:.3f}", flush=True)
+
+    payload = {"tolerance": args.tolerance, "autotune": args.autotune,
+               "ok": ok_all, "cases": results, "env": env_info()}
+    with open(os.path.join(os.getcwd(), "kernel_guard.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+    if not ok_all:
+        print("kernel_guard: FAIL")
+        return 1
+    print(f"kernel_guard: OK — {len(results)} cases, "
+          f"tolerance {args.tolerance}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

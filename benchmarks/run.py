@@ -26,6 +26,7 @@ ALL = [
     "moe_capacity_bench",
     "serving_bench",
     "scaling_bench",
+    "kernel_bench",
 ]
 
 

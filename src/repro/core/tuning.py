@@ -77,7 +77,12 @@ import jax
 # v3: ConfigKey grew step_horizon (the fused serving horizon, DESIGN.md
 # §14) and Decision grew the chosen step_horizon — v2 caches likewise
 # ignored wholesale
-SCHEMA_VERSION = 3
+# v4: the file grew a SEPARATE "kernels" section (KernelKey ->
+# KernelDecision, DESIGN.md §15).  Solver entries did NOT change shape,
+# so a v3 file's entries are replayed legally (its kernel section is
+# simply absent -> analytic); v2-and-older still ignored wholesale.
+SCHEMA_VERSION = 4
+_COMPAT_SCHEMAS = (3, SCHEMA_VERSION)   # solver entries replayable from
 
 # Fixed per-decode-step serving cost (dispatch + host sync) in units of
 # one grid row's forward work, calibrated from BENCH_serving.json's
@@ -205,6 +210,10 @@ class HardwareProfile:
     broadcast_spill: float
     backend_overhead: Mapping[str, float] = dataclasses.field(
         default_factory=dict)
+    # per-core fast-memory budget bounding one kernel grid step's working
+    # set (VMEM on TPU, shared-mem-ish on GPU, a generous L2-slice stand-in
+    # on CPU where "VMEM" is emulated by the interpreter anyway)
+    vmem_bytes: int = 16 * 1024 * 1024
 
 
 PROFILES: dict[str, HardwareProfile] = {
@@ -213,11 +222,13 @@ PROFILES: dict[str, HardwareProfile] = {
         flops=197e12, mem_bw=819e9, join_alpha=2e-6, link_bw=50e9,
         dispatch=4e-6, broadcast_spill=0.05,
         backend_overhead={"jnp": 0.0, "pallas": 0.0},
+        vmem_bytes=16 * 1024 * 1024,
     ),
     "gpu": HardwareProfile(
         flops=60e12, mem_bw=1500e9, join_alpha=8e-6, link_bw=25e9,
         dispatch=8e-6, broadcast_spill=0.1,
         backend_overhead={"jnp": 0.0, "pallas": 0.0},
+        vmem_bytes=8 * 1024 * 1024,
     ),
     # host-platform "devices" are threads of one socket: collectives are
     # runtime rendezvous + memcpy (BENCH_scaling.json join deltas of
@@ -227,6 +238,7 @@ PROFILES: dict[str, HardwareProfile] = {
         flops=8e9, mem_bw=12e9, join_alpha=350e-6, link_bw=2e9,
         dispatch=30e-6, broadcast_spill=1.0,
         backend_overhead={"jnp": 0.0, "pallas": 400e-6},
+        vmem_bytes=128 * 1024 * 1024,
     ),
 }
 
@@ -456,6 +468,222 @@ def _candidates(
 
 
 # ---------------------------------------------------------------------------
+# kernel tier: block/grid geometry decisions (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+# Per-grid-step (or per-loop-trip) overhead of the Pallas INTERPRETER —
+# each step replays the kernel body as jax ops through the interpreter
+# harness, hundreds of µs on the CPU box.  Used by the loop-trip models
+# (paged_attend) where fewer trips genuinely win; the tiled solver
+# kernels are instead cache-bound under the interpreter (see
+# kernel_candidates) so the step tax must NOT steer them to huge blocks.
+INTERPRET_STEP_COST = 200e-6
+# Compiled Mosaic grid-step overhead (revolver bookkeeping + DMA issue).
+COMPILED_STEP_COST = 0.5e-6
+
+_KERNEL_LANE = 128           # mirrors kernels/blocks.LANE; core must not
+# import from repro.kernels (the dependency arrow points kernels -> core),
+# so the tiny geometry math is restated here.
+
+_SOLVER_KERNELS = ("multi_count", "multi_mass",
+                   "multi_entropy", "multi_entropy_moments")
+
+
+def _lpad(n: int, mult: int = _KERNEL_LANE) -> int:
+    return -(-max(int(n), 1) // int(mult)) * int(mult)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelKey:
+    """The static configuration a kernel-geometry decision is keyed by.
+
+    ``shape`` is the kernel family's own signature tuple (documented per
+    family in :func:`kernel_candidates`), not a single array shape —
+    e.g. paged_attend keys on (B, n_kv, n_chain, page, L, R, head_dim).
+    ``interpret`` is part of the key because the interpreter's per-step
+    tax inverts the geometry trade-off: a block measured under interpret
+    mode must never steer a compiled TPU deployment.
+    """
+
+    kernel: str
+    shape: tuple[int, ...]
+    dtype: str
+    device_kind: str
+    interpret: bool = False
+
+    def cache_key(self) -> str:
+        return "|".join((
+            "kernel", self.kernel,
+            "x".join(str(int(s)) for s in self.shape),
+            self.dtype, self.device_kind or "cpu",
+            "interp" if self.interpret else "compiled",
+        ))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDecision:
+    """One resolved kernel geometry: a named block-parameter assignment.
+
+    ``block`` is a sorted tuple of (param, value) pairs — hashable, so
+    decisions dedupe in candidate sets; read it as a dict via
+    :attr:`params`.  Param names are the kernel's own static argnames
+    (``block_v``, ``q_chunk``/``kv_chunk``, ``pages_per_step``), which is
+    what lets ``kernels/ops.py`` splat a decision straight into the call.
+    """
+
+    block: tuple[tuple[str, int], ...]
+    source: str = "model"       # model | measured | cache | fixed
+
+    @property
+    def params(self) -> dict[str, int]:
+        return dict(self.block)
+
+    @staticmethod
+    def make(params: Mapping[str, int],
+             source: str = "model") -> "KernelDecision":
+        return KernelDecision(
+            block=tuple(sorted((str(k), int(v)) for k, v in params.items())),
+            source=source)
+
+    def to_json(self) -> dict:
+        return {"block": dict(self.block), "source": self.source}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "KernelDecision":
+        return KernelDecision.make(dict(d["block"]),
+                                   source=str(d.get("source", "cache")))
+
+    def label(self) -> str:
+        return ",".join(f"{k}={v}" for k, v in self.block)
+
+
+def kernel_candidates(
+    key: KernelKey,
+    profile: HardwareProfile | None = None,
+) -> list[tuple[float, KernelDecision]]:
+    """Analytic (predicted_seconds, KernelDecision) pairs, cheapest first.
+
+    The first roofline pass of the kernel tier: per candidate geometry,
+    cost = steps * (step_tax + max(flops/peak, bytes/bw)), with the
+    VMEM-fit filter discarding infeasible blocks up front.
+
+    Interpret mode is modelled differently: the interpreter's cost
+    surface is HOST-cache dominated — the materialised (m_pad, block)
+    broadcast grows per-step cost superlinearly past L2, so bigger
+    blocks LOSE despite fewer grid steps (BENCH_kernels.json: the
+    whole-row block is 2x slower than 2048 at (8, 8192, 15) on this
+    box).  The analytic tier therefore pins the legacy default under
+    interpret mode, ranking candidates by distance from it so the
+    measured tier's top-3 stays centred there; genuine interpret-mode
+    wins come from measurement (``REPRO_AUTOTUNE``), not the model.
+
+    Key shapes per family:
+      multi_count / multi_mass / multi_entropy[_moments]: (B, V, M)
+      runahead_topk:  (B, V)
+      flash_fwd:      (B, S, H, D)
+      paged_attend:   (B, n_kv, n_chain, page_size, L, R, head_dim)
+    Unknown families return [] (the caller's fixed geometry stands).
+    """
+    profile = profile or profile_for(key.device_kind)
+    itemsize = 2 if key.dtype in ("bfloat16", "float16") else 4
+    step = INTERPRET_STEP_COST if key.interpret else COMPILED_STEP_COST
+    budget = profile.vmem_bytes * 0.5    # headroom for double-buffering
+    out: list[tuple[float, KernelDecision]] = []
+
+    if key.kernel in _SOLVER_KERNELS:
+        B, V, M = key.shape
+        m_pad = _lpad(M)
+        v_lane = _lpad(V)
+        kf = _KIND_FLOPS.get({
+            "multi_count": "count_above",
+            "multi_mass": "mass_at_or_above",
+        }.get(key.kernel, "entropy_at_temperature"), 4.0)
+        cands = sorted({min(_lpad(b), v_lane)
+                        for b in (256, 512, 1024, 2048, 4096, 8192,
+                                  16384, v_lane)})
+        default_b = min(_lpad(2048), v_lane)
+        for b in cands:
+            # streamed tile + resident candidates + accumulator + the
+            # broadcast (m_pad, b) compare grid (blocks.solver_tile_bytes)
+            tile = itemsize * (b + 2 * m_pad + m_pad * b)
+            if tile > budget:
+                continue
+            if key.interpret:
+                cost = abs(math.log2(b) - math.log2(default_b))
+            else:
+                steps = _lpad(V, b) // b
+                flops = float(b) * m_pad * kf
+                byts = float(itemsize) * b
+                cost = B * steps * (
+                    step + max(flops / profile.flops,
+                               byts / profile.mem_bw))
+            out.append((cost, KernelDecision.make({"block_v": b})))
+
+    elif key.kernel == "runahead_topk":
+        B, V = key.shape[0], key.shape[1]
+        for b in (128, 256, 512):
+            # whole row stays resident; block only sets padding — minimal
+            # padded bytes win, so LANE is the stable choice
+            v_pad = _lpad(V, b)
+            if itemsize * v_pad > budget:
+                continue
+            cost = B * (step + itemsize * float(v_pad) / profile.mem_bw)
+            out.append((cost, KernelDecision.make({"block_v": b})))
+
+    elif key.kernel == "flash_fwd":
+        B, S, H, D = key.shape
+        cset = {c for c in (128, 256, 512, 1024, 2048)
+                if c < S and S % c == 0}
+        cset.add(int(S))
+        # the legacy 512/1024 defaults, legalised to divisors of S the
+        # way ops.flash_fwd's fixed geometry is (blocks.divisor_chunk)
+        default_qc = max(c for c in cset if c <= 512) \
+            if any(c <= 512 for c in cset) else min(cset)
+        default_kc = max(c for c in cset if c <= 1024) \
+            if any(c <= 1024 for c in cset) else min(cset)
+        for qc in sorted(cset):
+            for kc in sorted(cset):
+                # q tile + k/v tiles + the f32 (qc, kc) score tile
+                tile = itemsize * (qc * D + 2 * kc * D) + 4 * qc * kc
+                if tile > budget:
+                    continue
+                if key.interpret:
+                    cost = (abs(math.log2(qc) - math.log2(default_qc))
+                            + abs(math.log2(kc) - math.log2(default_kc)))
+                else:
+                    steps = (S // qc) * (S // kc)
+                    flops = 4.0 * qc * kc * D        # qk^T + pv matmuls
+                    byts = float(itemsize) * (qc * D + 2 * kc * D)
+                    cost = B * H * steps * (
+                        step + max(flops / profile.flops,
+                                   byts / profile.mem_bw))
+                out.append((cost, KernelDecision.make(
+                    {"q_chunk": qc, "kv_chunk": kc})))
+
+    elif key.kernel == "paged_attend":
+        B, nkv, n_chain, P, L, R, D = key.shape
+        for d in sorted({min(d, max(1, int(n_chain)))
+                         for d in (1, 2, 4, 8)}):
+            if key.interpret:
+                # under the interpreter the chain loop is NOT a pallas
+                # grid step (grid is (B, n_kv)), so there is no per-trip
+                # interpreter tax for unrolling to amortise — depth is a
+                # noise-level wash; pin the default, measured tier only
+                cost = math.log2(2 * d)
+            else:
+                steps = -(-n_chain // d)
+                pages = steps * d    # trailing masked pages still cost
+                page_work = max(
+                    4.0 * L * R * P * D / profile.flops,
+                    float(itemsize) * 2 * P * D / profile.mem_bw)
+                cost = B * nkv * (steps * step + pages * page_work)
+            out.append((cost, KernelDecision.make({"pages_per_step": d})))
+
+    out.sort(key=lambda cd: (cd[0], cd[1].block))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # state: thread-local modes + the persistent cache
 # ---------------------------------------------------------------------------
 
@@ -538,8 +766,10 @@ class Tuner:
         self._lock = threading.Lock()
         self._path = cache_path
         self._entries: dict[str, dict] = {}
+        self._kernels: dict[str, dict] = {}     # KernelKey -> entry (§15)
         self._loaded = False
         self.recent: dict[str, Decision] = {}   # last decisions, for logs
+        self.recent_kernels: dict[str, KernelDecision] = {}
 
     # -- persistence --------------------------------------------------------
 
@@ -554,6 +784,7 @@ class Tuner:
         with self._lock:
             self._path = path
             self._entries = {}
+            self._kernels = {}
             self._loaded = False
 
     def _load_locked(self):
@@ -566,16 +797,24 @@ class Tuner:
         except (OSError, ValueError):
             return
         # stale / future schema: ignore wholesale — a bad entry must never
-        # steer the solver (the roundtrip test pins this)
-        if not isinstance(data, dict) or data.get("schema") != SCHEMA_VERSION:
+        # steer the solver (the roundtrip test pins this).  v3 is the one
+        # compatible back-rev: solver entries kept their shape, so they
+        # replay; its (absent) kernel section just means analytic.
+        if not isinstance(data, dict) \
+                or data.get("schema") not in _COMPAT_SCHEMAS:
             return
         entries = data.get("entries")
         if isinstance(entries, dict):
             self._entries = dict(entries)
+        if data.get("schema") == SCHEMA_VERSION:
+            kernels = data.get("kernels")
+            if isinstance(kernels, dict):
+                self._kernels = dict(kernels)
 
     def _save_locked(self):
         path = self.cache_path()
-        payload = {"schema": SCHEMA_VERSION, "entries": self._entries}
+        payload = {"schema": SCHEMA_VERSION, "entries": self._entries,
+                   "kernels": self._kernels}
         d = os.path.dirname(path) or "."
         try:
             os.makedirs(d, exist_ok=True)
@@ -590,6 +829,7 @@ class Tuner:
     def clear_cache(self):
         with self._lock:
             self._entries = {}
+            self._kernels = {}
             self._loaded = True
             try:
                 os.unlink(self.cache_path())
@@ -703,6 +943,88 @@ class Tuner:
                     return d_best
         return dataclasses.replace(best, source="model")
 
+    # -- the kernel-geometry decision procedure (DESIGN.md §15) -------------
+
+    def decide_kernel(
+        self,
+        key: KernelKey,
+        *,
+        fixed: Mapping[str, int],
+        measure: Callable[[Sequence[Mapping[str, int]]], Sequence[float]]
+            | None = None,
+        tune: bool | None = None,
+    ) -> KernelDecision:
+        """Resolve the block geometry for `key`.
+
+        fixed: the kernel's legacy hard-coded params (e.g.
+        ``{"block_v": 2048}``) — returned verbatim when tuning is
+        disabled, always in the measured candidate set.  measure:
+        callback timing candidate param dicts (seconds each, NaN for a
+        failed candidate), supplied by ``kernels/ops.py``.  Mirrors
+        :meth:`decide`: disabled -> fixed, cache hit -> legality-checked
+        replay, analytic -> cheapest roofline candidate, measured
+        (``tune``/:func:`autotune`/``REPRO_AUTOTUNE``) -> timed top-3 +
+        fixed, winner persisted under the cache's "kernels" section.
+        """
+        ck = key.cache_key()
+
+        def _remember(d: KernelDecision) -> KernelDecision:
+            self.recent_kernels[ck] = d
+            if len(self.recent_kernels) > 256:
+                self.recent_kernels.pop(next(iter(self.recent_kernels)))
+            return d
+
+        if _is_disabled():
+            return _remember(KernelDecision.make(fixed, source="fixed"))
+
+        with self._lock:
+            self._load_locked()
+            hit = self._kernels.get(ck)
+        if hit is not None:
+            try:
+                d = KernelDecision.from_json(hit["decision"])
+            except (KeyError, TypeError, ValueError):
+                d = None
+            # replay legality: the entry must name exactly the params this
+            # kernel takes, all sane positive values — a hand-edited or
+            # corrupted entry must never steer a kernel launch
+            if d is not None and set(d.params) == set(fixed) \
+                    and all(v >= 1 for v in d.params.values()):
+                return _remember(
+                    dataclasses.replace(d, source="cache"))
+
+        ranked = kernel_candidates(key)
+        best = (ranked[0][1] if ranked
+                else KernelDecision.make(fixed, source="model"))
+
+        if measure is not None and _autotune_active(tune):
+            cand = [d for _, d in ranked[:3]]
+            fx = KernelDecision.make(fixed, source="fixed")
+            if all(c.block != fx.block for c in cand):
+                cand.append(fx)
+            try:
+                times = list(measure([c.params for c in cand]))
+            except Exception:
+                times = []
+            if times and len(times) == len(cand):
+                pairs = [(t, c) for t, c in zip(times, cand)
+                         if t == t and t > 0]        # drop NaN/failed
+                if pairs:
+                    _, d_best = min(pairs, key=lambda p: p[0])
+                    d_best = dataclasses.replace(d_best, source="measured")
+                    entry = {
+                        "decision": d_best.to_json(),
+                        "measured_us": {
+                            c.label(): round(t * 1e6, 1)
+                            for t, c in zip(times, cand) if t == t
+                        },
+                    }
+                    with self._lock:
+                        self._kernels[ck] = entry
+                        self._save_locked()
+                    return _remember(d_best)
+        return _remember(dataclasses.replace(best, source="model"))
+
 
 # module-level singleton ------------------------------------------------------
 
@@ -715,6 +1037,10 @@ def tuner() -> Tuner:
 
 def decide(key: ConfigKey, **kw) -> Decision:
     return _TUNER.decide(key, **kw)
+
+
+def decide_kernel(key: KernelKey, **kw) -> KernelDecision:
+    return _TUNER.decide_kernel(key, **kw)
 
 
 def clear_cache():
@@ -733,3 +1059,9 @@ def explain() -> list[tuple[str, Decision]]:
     """Recent (config key, decision) pairs — what the tuner chose and why
     (``source`` says which tier produced each)."""
     return list(_TUNER.recent.items())
+
+
+def explain_kernels() -> list[tuple[str, KernelDecision]]:
+    """Recent (kernel key, geometry decision) pairs — kept separate from
+    :func:`explain` because the two decision types share no fields."""
+    return list(_TUNER.recent_kernels.items())

@@ -25,8 +25,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_V = 2048   # vocab tile per grid step (f32: 8 KiB — deep in VMEM budget)
-LANE = 128       # TPU lane width; candidate dim padded to a multiple
+from repro.kernels import blocks
+
+BLOCK_V = blocks.DEFAULT_BLOCK_V   # legacy default vocab tile per grid step
+LANE = blocks.LANE                 # TPU lane width; candidate dim padded
 
 
 def _kernel(logits_ref, taus_ref, out_ref):
@@ -36,7 +38,7 @@ def _kernel(logits_ref, taus_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    block = logits_ref[...]                       # (1, BLOCK_V)
+    block = logits_ref[...]                       # (1, block_v)
     taus = taus_ref[...]                          # (1, M_pad)
     # (1, M_pad, BLOCK_V) compare — fused by Mosaic into VPU ops; the
     # reduction folds the vocab tile into the per-candidate partial count.
@@ -44,16 +46,21 @@ def _kernel(logits_ref, taus_ref, out_ref):
     out_ref[...] += jnp.sum(hits, axis=-1).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def multi_count(logits: jax.Array, taus: jax.Array, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def multi_count(logits: jax.Array, taus: jax.Array, *,
+                block_v: int | None = None, interpret: bool = False):
     """counts[b, m] = #{v : logits[b, v] > taus[b, m]}.
 
     logits: (B, V) float32;  taus: (B, M) float32  ->  (B, M) float32.
+    ``block_v`` is the vocab tile per grid step (lane-clamped; None =
+    the legacy :data:`BLOCK_V`).  Counts are order-invariant integer
+    sums, so the result is BIT-identical for every block size.
     """
     B, V = logits.shape
     _, M = taus.shape
-    m_pad = -(-M // LANE) * LANE
-    v_pad = -(-V // BLOCK_V) * BLOCK_V
+    block = blocks.clamp_block_v(block_v, V)
+    m_pad = blocks.lane_pad(M)
+    v_pad, n_steps = blocks.grid_v(V, block)
     logits_p = jnp.pad(logits, ((0, 0), (0, v_pad - V)),
                        constant_values=-jnp.inf)
     # Padded candidates get +inf thresholds -> count 0, discarded below.
@@ -61,9 +68,9 @@ def multi_count(logits: jax.Array, taus: jax.Array, *, interpret: bool = False):
 
     out = pl.pallas_call(
         _kernel,
-        grid=(B, v_pad // BLOCK_V),
+        grid=(B, n_steps),
         in_specs=[
-            pl.BlockSpec((1, BLOCK_V), lambda b, v: (b, v)),
+            pl.BlockSpec((1, block), lambda b, v: (b, v)),
             pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),

@@ -29,8 +29,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_V = 2048   # vocab tile per grid step
-LANE = 128       # TPU lane width; candidate dim padded to a multiple
+from repro.kernels import blocks
+
+BLOCK_V = blocks.DEFAULT_BLOCK_V   # legacy default vocab tile per grid step
+LANE = blocks.LANE                 # TPU lane width; candidate dim padded
 
 _PAD_SENTINEL = -1e30
 
@@ -42,9 +44,9 @@ def _kernel(z_ref, ts_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    z = z_ref[...]                                # (1, BLOCK_V), max-shifted
+    z = z_ref[...]                                # (1, block_v), max-shifted
     ts = ts_ref[...]                              # (1, M_pad)
-    zt = z[:, None, :] / ts[:, :, None]           # (1, M_pad, BLOCK_V)
+    zt = z[:, None, :] / ts[:, :, None]           # (1, M_pad, block_v)
     e = jnp.exp(zt)
     s = jnp.sum(e, axis=-1)                       # (1, M_pad)
     w = jnp.sum(zt * e, axis=-1)                  # (1, M_pad)
@@ -53,9 +55,10 @@ def _kernel(z_ref, ts_ref, out_ref):
     ).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
 def multi_entropy_moments(
-    z_shifted: jax.Array, ts: jax.Array, *, interpret: bool = False
+    z_shifted: jax.Array, ts: jax.Array, *,
+    block_v: int | None = None, interpret: bool = False
 ):
     """The kernel's raw accumulator pair for PRE-SHIFTED logits.
 
@@ -65,20 +68,24 @@ def multi_entropy_moments(
     returned partials across shards before finalising H).
     Returns (s, w), each (B, M): s[m] = sum_v exp(z_v / T_m),
     w[m] = sum_v (z_v / T_m) exp(z_v / T_m).
+    ``block_v`` is the vocab tile per grid step (lane-clamped; None =
+    the legacy :data:`BLOCK_V`); like ``multi_mass`` the float partials
+    regroup with the block, so cross-block parity is allclose.
     """
     B, V = z_shifted.shape
     _, M = ts.shape
-    m_pad = -(-M // LANE) * LANE
-    v_pad = -(-V // BLOCK_V) * BLOCK_V
+    block = blocks.clamp_block_v(block_v, V)
+    m_pad = blocks.lane_pad(M)
+    v_pad, n_steps = blocks.grid_v(V, block)
     z_p = jnp.pad(z_shifted.astype(jnp.float32), ((0, 0), (0, v_pad - V)),
                   constant_values=_PAD_SENTINEL)
     ts_p = jnp.pad(ts, ((0, 0), (0, m_pad - M)), constant_values=1.0)
 
     acc = pl.pallas_call(
         _kernel,
-        grid=(B, v_pad // BLOCK_V),
+        grid=(B, n_steps),
         in_specs=[
-            pl.BlockSpec((1, BLOCK_V), lambda b, v: (b, v)),
+            pl.BlockSpec((1, block), lambda b, v: (b, v)),
             pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, 2, m_pad), lambda b, v: (b, 0, 0)),
@@ -88,9 +95,10 @@ def multi_entropy_moments(
     return acc[:, 0, :M], acc[:, 1, :M]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
 def multi_entropy(
-    logits: jax.Array, ts: jax.Array, *, interpret: bool = False
+    logits: jax.Array, ts: jax.Array, *,
+    block_v: int | None = None, interpret: bool = False
 ):
     """H[b, m] = entropy of softmax(logits[b] / ts[b, m]).
 
@@ -98,5 +106,5 @@ def multi_entropy(
     """
     z = logits.astype(jnp.float32)
     z = z - jnp.max(z, axis=-1, keepdims=True)
-    s, w = multi_entropy_moments(z, ts, interpret=interpret)
+    s, w = multi_entropy_moments(z, ts, block_v=block_v, interpret=interpret)
     return jnp.log(s) - w / s

@@ -22,8 +22,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_V = 2048   # vocab tile per grid step (f32: 8 KiB — deep in VMEM budget)
-LANE = 128       # TPU lane width; candidate dim padded to a multiple
+from repro.kernels import blocks
+
+BLOCK_V = blocks.DEFAULT_BLOCK_V   # legacy default vocab tile per grid step
+LANE = blocks.LANE                 # TPU lane width; candidate dim padded
 
 
 def _kernel(probs_ref, taus_ref, out_ref):
@@ -33,32 +35,38 @@ def _kernel(probs_ref, taus_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    block = probs_ref[...]                        # (1, BLOCK_V)
+    block = probs_ref[...]                        # (1, block_v)
     taus = taus_ref[...]                          # (1, M_pad)
-    keep = block[:, None, :] >= taus[:, :, None]  # (1, M_pad, BLOCK_V)
+    keep = block[:, None, :] >= taus[:, :, None]  # (1, M_pad, block_v)
     out_ref[...] += jnp.sum(
         jnp.where(keep, block[:, None, :], 0.0), axis=-1
     ).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def multi_mass(probs: jax.Array, taus: jax.Array, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def multi_mass(probs: jax.Array, taus: jax.Array, *,
+               block_v: int | None = None, interpret: bool = False):
     """mass[b, m] = sum of probs[b, v] where probs[b, v] >= taus[b, m].
 
     probs: (B, V) float32;  taus: (B, M) float32  ->  (B, M) float32.
+    ``block_v`` is the vocab tile per grid step (lane-clamped; None =
+    the legacy :data:`BLOCK_V`).  Partial sums accumulate per tile, so
+    different blocks regroup the float reduction — allclose across
+    blocks, bit-identical only at a fixed block.
     """
     B, V = probs.shape
     _, M = taus.shape
-    m_pad = -(-M // LANE) * LANE
-    v_pad = -(-V // BLOCK_V) * BLOCK_V
+    block = blocks.clamp_block_v(block_v, V)
+    m_pad = blocks.lane_pad(M)
+    v_pad, n_steps = blocks.grid_v(V, block)
     probs_p = jnp.pad(probs, ((0, 0), (0, v_pad - V)), constant_values=-1.0)
     taus_p = jnp.pad(taus, ((0, 0), (0, m_pad - M)), constant_values=jnp.inf)
 
     out = pl.pallas_call(
         _kernel,
-        grid=(B, v_pad // BLOCK_V),
+        grid=(B, n_steps),
         in_specs=[
-            pl.BlockSpec((1, BLOCK_V), lambda b, v: (b, v)),
+            pl.BlockSpec((1, block), lambda b, v: (b, v)),
             pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, m_pad), lambda b, v: (b, 0)),

@@ -39,7 +39,7 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, tab_ref, pos_ref, o_ref, *,
-            context, page_size, n_draft, n_rep, scale):
+            context, page_size, n_draft, n_rep, scale, pages_per_step=1):
     C, P, L, R = context, page_size, n_draft, n_rep
     D = q_ref.shape[-1]
     q = q_ref[0, 0].astype(jnp.float32).reshape(L * R, D)    # (L*R, D)
@@ -49,9 +49,15 @@ def _kernel(q_ref, k_ref, v_ref, tab_ref, pos_ref, o_ref, *,
     wraps = pq // C
     n_chain = tab_ref.shape[1]
 
-    def body(j, carry):
+    def one_page(j, carry):
+        # One page of the chain folded into the online-softmax state.
+        # ``j`` may run past n_chain - 1 when the unroll depth does not
+        # divide the chain; the table read is clamped but ``lin`` keeps
+        # the true index, so every lane of such a page has lin >= C and
+        # masks out (p underflows to 0, corr = 1 — state untouched,
+        # which is why unrolled results stay BIT-identical to depth 1).
         m, l, acc = carry
-        pid = tab_ref[0, j]
+        pid = tab_ref[0, jnp.minimum(j, n_chain - 1)]
         k_pg = k_ref[pl.dslice(pid, 1), :, 0, :][0].astype(jnp.float32)
         v_pg = v_ref[pl.dslice(pid, 1), :, 0, :][0].astype(jnp.float32)
         s = q @ k_pg.T * scale                               # (L*R, P)
@@ -70,16 +76,24 @@ def _kernel(q_ref, k_ref, v_ref, tab_ref, pos_ref, o_ref, *,
         acc = acc * corr + p @ v_pg
         return m_new, l, acc
 
+    d = max(1, int(pages_per_step))
+
+    def body(jo, carry):
+        for i in range(d):                       # statically unrolled
+            carry = one_page(jo * d + i, carry)
+        return carry
+
+    n_steps = -(-n_chain // d)
     m0 = jnp.full((L * R, 1), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((L * R, 1), jnp.float32)
     a0 = jnp.zeros((L * R, D), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, n_chain, body, (m0, l0, a0))
+    m, l, acc = jax.lax.fori_loop(0, n_steps, body, (m0, l0, a0))
     out = acc / jnp.maximum(l, 1e-30)
     o_ref[0, 0] = out.reshape(L, R, D).astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("context", "interpret"))
+    jax.jit, static_argnames=("context", "pages_per_step", "interpret"))
 def paged_attend(
     pool_k: jax.Array,       # (n_pages, P, n_kv, hd)
     pool_v: jax.Array,
@@ -88,6 +102,7 @@ def paged_attend(
     q: jax.Array,            # (B, L, n_heads, hd) — rope already applied
     *,
     context: int,
+    pages_per_step: int = 1,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused paged decode/verify attention; returns (B, L, n_heads, hd).
@@ -95,6 +110,11 @@ def paged_attend(
     The drafted K/V rows must already be written into the pool (the
     caller scatters them first, exactly as the dense verify path writes
     its ring rows before attending).
+
+    ``pages_per_step`` is the page-stream unroll depth: the chain loop
+    body folds that many pages per fori_loop trip (tunable — amortises
+    loop/DMA overhead on short chains).  Results are bit-identical for
+    every depth; see the kernel comment for the trailing-page argument.
     """
     n_pages, P, nkv, D = pool_k.shape
     B, L, nq, _ = q.shape
@@ -106,6 +126,7 @@ def paged_attend(
     kern = functools.partial(
         _kernel, context=context, page_size=P, n_draft=L, n_rep=R,
         scale=1.0 / math.sqrt(D),
+        pages_per_step=min(max(1, int(pages_per_step)), n_chain),
     )
     out = pl.pallas_call(
         kern,

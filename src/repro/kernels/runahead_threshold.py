@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANE = 128
+from repro.kernels import blocks
+
+LANE = blocks.LANE
 
 
 def _midpoint_grid(lo, hi, spec_k: int):
@@ -94,7 +96,8 @@ def _make_kernel(k_target: int, rounds: int, spec_k: int, v_real: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k_target", "rounds", "spec_k", "interpret")
+    jax.jit,
+    static_argnames=("k_target", "rounds", "spec_k", "block_v", "interpret"),
 )
 def runahead_topk_threshold(
     logits: jax.Array,
@@ -102,12 +105,19 @@ def runahead_topk_threshold(
     k_target: int,
     rounds: int = 8,
     spec_k: int = 5,
+    block_v: int | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused solve: logits (B, V) -> (lo, hi) each (B,), bracketing the
-    k-th largest value per row.  rounds × spec_k serial-equivalent steps."""
+    k-th largest value per row.  rounds × spec_k serial-equivalent steps.
+
+    The row stays whole-row VMEM-resident (that is this kernel's point);
+    ``block_v`` only sets the resident row's padding granularity — the
+    lane-masked count is invariant to it, so results are BIT-identical
+    for every legal value (None = :data:`LANE`, the minimum padding).
+    """
     B, V = logits.shape
-    v_pad = -(-V // LANE) * LANE
+    v_pad = blocks.pad_to(V, blocks.clamp_block_v(block_v or LANE, V))
     logits_p = jnp.pad(logits.astype(jnp.float32), ((0, 0), (0, v_pad - V)))
 
     out = pl.pallas_call(

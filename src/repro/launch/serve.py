@@ -286,13 +286,11 @@ def main(argv=None):
                          "before jax first touches the backend)")
     args = ap.parse_args(argv)
 
-    if args.host_devices:
-        # honored only if the backend is still uninitialised — this is
-        # why the flag lives here and not after model init
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.host_devices}"
-        )
+    # launch hygiene first — XLA_FLAGS / dtype pins are read when jax
+    # first touches the backend, which model init below triggers
+    from repro.launch import env as launch_env
+
+    launch_env.configure(host_devices=args.host_devices)
     if args.speculative and not args.continuous:
         raise SystemExit("--speculative requires --continuous")
     mesh = None
@@ -327,6 +325,9 @@ def main(argv=None):
         log.info("tuned %s -> %s/%s spec_k=%d rounds=%d [%s]",
                  cfg_key, decision.placement, decision.backend,
                  decision.spec_k, decision.rounds, decision.source)
+    for kern_key, kdecision in tuning.explain_kernels():
+        log.info("tuned %s -> %s [%s]",
+                 kern_key, kdecision.label(), kdecision.source)
     if args.autotune:
         log.info("tuning cache: %s", tuning.cache_path())
     return out

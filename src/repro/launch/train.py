@@ -76,6 +76,11 @@ def main(argv=None):
                     help="fault-injection: hard-exit at this step")
     args = ap.parse_args(argv)
 
+    # launch hygiene before jax first touches the backend
+    from repro.launch import env as launch_env
+
+    launch_env.configure()
+
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
     cfg, tc, step_fn = build(args)

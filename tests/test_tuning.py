@@ -166,8 +166,11 @@ def test_cache_roundtrip_and_stale_schema(tmp_path):
         (4, 6, "vocab", "jnp")
 
     # stale schema: poison the file with a wrong version — ignored
-    # wholesale, the tuner falls back to the analytic model
-    poisoned = dict(on_disk, schema=tuning.SCHEMA_VERSION - 1)
+    # wholesale, the tuner falls back to the analytic model.  (v3 — one
+    # back — is the deliberate exception: solver entries kept their
+    # shape across the v4 kernel-section addition, so it must REPLAY;
+    # pinned separately in test_v3_cache_solver_entries_replay.)
+    poisoned = dict(on_disk, schema=tuning.SCHEMA_VERSION - 2)
     with open(path, "w") as f:
         json.dump(poisoned, f)
     t3 = tuning.Tuner(path)
@@ -371,3 +374,182 @@ def test_decide_step_horizon_respects_cap_and_validates():
         tuning.decide_step_horizon(mean_remaining=8.0, max_horizon=0)
     with pytest.raises(ValueError):
         tuning.decide_step_horizon(mean_remaining=8.0, load=1.5)
+
+
+# ---------------------------------------------------------------------------
+# the kernel-geometry tier (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def _kkey(**kw):
+    base = dict(kernel="multi_count", shape=(8, 8192, 15), dtype="float32",
+                device_kind="cpu", interpret=True)
+    base.update(kw)
+    return tuning.KernelKey(**base)
+
+
+_KFIXED = {"block_v": 2048}
+
+
+def test_kernel_decision_roundtrips_and_label():
+    d = tuning.KernelDecision.make({"kv_chunk": 256, "q_chunk": 128},
+                                   source="measured")
+    assert d.params == {"q_chunk": 128, "kv_chunk": 256}
+    assert d.label() == "kv_chunk=256,q_chunk=128"
+    assert tuning.KernelDecision.from_json(d.to_json()).block == d.block
+
+
+def test_kernel_disabled_pins_fixed_geometry():
+    t = tuning.Tuner(None)
+    with tuning.disabled():
+        d = t.decide_kernel(_kkey(), fixed=_KFIXED,
+                            measure=lambda c: pytest.fail(
+                                "disabled must not measure"))
+    assert d.source == "fixed"
+    assert d.params == _KFIXED
+
+
+def test_kernel_analytic_interpret_pins_legacy_defaults():
+    """The interpreter's cost surface is host-cache dominated (bigger
+    blocks LOSE); the analytic tier must pin the legacy geometry and
+    leave interpret-mode wins to the measured tier."""
+    best = tuning.kernel_candidates(_kkey())[0][1]
+    assert best.params == {"block_v": 2048}
+    best = tuning.kernel_candidates(
+        _kkey(kernel="paged_attend", shape=(4, 2, 8, 8, 2, 2, 16)))[0][1]
+    assert best.params == {"pages_per_step": 1}
+    best = tuning.kernel_candidates(
+        _kkey(kernel="flash_fwd", shape=(1, 2048, 16, 128)))[0][1]
+    assert best.params == {"q_chunk": 512, "kv_chunk": 1024}
+
+
+def test_kernel_analytic_compiled_roofline_scales_blocks():
+    """Compiled on TPU the step tax rewards bigger blocks — up to the
+    VMEM-fit filter: at M=15 (m_pad 128) the broadcast compare tile puts
+    16384 past the half-VMEM budget, so 8192 is the ceiling."""
+    ranked = tuning.kernel_candidates(
+        _kkey(shape=(8, 152064, 15), device_kind="tpu", interpret=False))
+    blocks_seen = {d.params["block_v"] for _, d in ranked}
+    assert 16384 not in blocks_seen          # VMEM-filtered
+    assert ranked[0][1].params == {"block_v": 8192}
+
+
+def test_kernel_unknown_family_keeps_fixed():
+    t = tuning.Tuner(None)
+    d = t.decide_kernel(_kkey(kernel="no_such_kernel", shape=(4,)),
+                        fixed={"block_v": 64})
+    assert d.source == "model"
+    assert d.params == {"block_v": 64}
+
+
+def test_kernel_cache_roundtrip_and_stale_schema(tmp_path):
+    path = str(tmp_path / "cache.json")
+
+    # measured tier: score the SECOND-ranked candidate fastest — the
+    # winner must be exactly that geometry, persisted under "kernels"
+    seen = []
+
+    def measure(cands):
+        seen.append([dict(c) for c in cands])
+        return [1e-4 if i == 1 else 1e-2 for i in range(len(cands))]
+
+    t1 = tuning.Tuner(path)
+    with tuning.autotune():
+        d1 = t1.decide_kernel(_kkey(), fixed=_KFIXED, measure=measure)
+    assert d1.source == "measured"
+    assert len(seen) == 1 and len(seen[0]) >= 2
+    assert d1.params == seen[0][1]
+
+    on_disk = json.load(open(path))
+    assert on_disk["schema"] == tuning.SCHEMA_VERSION
+    [(ck, entry)] = on_disk["kernels"].items()
+    assert ck == _kkey().cache_key()
+    assert entry["decision"]["block"] == d1.params
+    assert d1.label() in entry["measured_us"]
+
+    # fresh tuner: replayed from the cache, measure never consulted even
+    # with autotune active (the cache hit precedes the measured tier)
+    t2 = tuning.Tuner(path)
+    with tuning.autotune():
+        d2 = t2.decide_kernel(
+            _kkey(), fixed=_KFIXED,
+            measure=lambda c: pytest.fail("cache hit must not measure"))
+    assert d2.source == "cache"
+    assert d2.params == d1.params
+
+    # a DIFFERENT key (compiled vs interpret) must not hit that entry
+    d3 = t2.decide_kernel(_kkey(interpret=False), fixed=_KFIXED)
+    assert d3.source == "model"
+
+    # stale schema: ignored wholesale, back to the analytic model
+    poisoned = dict(on_disk, schema=tuning.SCHEMA_VERSION - 2)
+    with open(path, "w") as f:
+        json.dump(poisoned, f)
+    t4 = tuning.Tuner(path)
+    d4 = t4.decide_kernel(_kkey(), fixed=_KFIXED)
+    assert d4.source == "model"
+
+
+def test_v3_cache_solver_entries_replay_kernels_do_not(tmp_path):
+    """The deliberate v3 compatibility: solver entries kept their shape
+    across the v4 kernel-section addition, so a v3 file's entries still
+    replay — but any kernel section it carries is ignored (that shape
+    only exists at v4), leaving kernel decisions to the analytic tier."""
+    path = str(tmp_path / "cache.json")
+    fixed = tuning.Decision(spec_k=4, rounds=6, placement="vocab",
+                            backend="jnp", source="fixed")
+    t1 = tuning.Tuner(path)
+    with tuning.autotune():
+        t1.decide(_key(), options=OPTIONS, backends=("jnp",), fixed=fixed,
+                  measure=_measure_fastest(4, "vocab"))
+        t1.decide_kernel(_kkey(), fixed=_KFIXED,
+                         measure=lambda c: [1e-4] * len(c))
+
+    on_disk = json.load(open(path))
+    assert on_disk["entries"] and on_disk["kernels"]
+    with open(path, "w") as f:
+        json.dump(dict(on_disk, schema=3), f)
+
+    t2 = tuning.Tuner(path)
+    ds = t2.decide(_key(), options=OPTIONS, backends=("jnp",), fixed=fixed,
+                   measure=lambda c: pytest.fail("v3 entries must replay"))
+    assert ds.source == "cache"
+    dk = t2.decide_kernel(_kkey(), fixed=_KFIXED)
+    assert dk.source == "model"
+
+
+@pytest.mark.parametrize("bad_block", [
+    {"block_v": 0},                          # insane value
+    {"blocks_v": 2048},                      # wrong param name
+    {"block_v": 2048, "q_chunk": 128},       # extra param
+    {},                                      # empty
+])
+def test_kernel_corrupted_entry_not_replayed(tmp_path, bad_block):
+    """A hand-edited or corrupted kernel entry must never steer a
+    launch: params must match the kernel's own argnames exactly, all
+    values sane — anything else falls back to the analytic model."""
+    path = str(tmp_path / "cache.json")
+    blob = {"schema": tuning.SCHEMA_VERSION, "entries": {},
+            "kernels": {_kkey().cache_key(): {
+                "decision": {"block": bad_block, "source": "measured"}}}}
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    t = tuning.Tuner(path)
+    d = t.decide_kernel(_kkey(), fixed=_KFIXED)
+    assert d.source == "model"
+    assert d.params == _KFIXED or set(d.params) == set(_KFIXED)
+
+
+def test_kernel_measured_failures_fall_back(tmp_path):
+    """All-NaN measurements (every candidate crashed) must not persist a
+    winner — the analytic choice stands and the cache stays empty."""
+    import os
+
+    path = str(tmp_path / "cache.json")
+    t = tuning.Tuner(path)
+    with tuning.autotune():
+        d = t.decide_kernel(_kkey(), fixed=_KFIXED,
+                            measure=lambda c: [float("nan")] * len(c))
+    assert d.source == "model"
+    if os.path.exists(path):
+        assert _kkey().cache_key() not in \
+            json.load(open(path)).get("kernels", {})
